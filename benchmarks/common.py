@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: dataset/caches, timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compiler import compile_bgp
+from repro.core.executor import execute
+from repro.core.sparql import parse_sparql
+from repro.core.stats import Catalog, build_catalog
+from repro.rdf.generator import WatDivConfig, WatDivSchema, generate_watdiv
+
+_DATASETS: Dict[Tuple[float, int], Tuple[np.ndarray, object, WatDivSchema]] = {}
+_CATALOGS: Dict[Tuple[float, int, float, bool], Catalog] = {}
+
+
+def dataset(scale: float, seed: int = 0):
+    key = (scale, seed)
+    if key not in _DATASETS:
+        _DATASETS[key] = generate_watdiv(WatDivConfig(scale_factor=scale,
+                                                      seed=seed))
+    return _DATASETS[key]
+
+
+def catalog(scale: float, seed: int = 0, threshold: float = 1.0,
+            with_extvp: bool = True) -> Catalog:
+    key = (scale, seed, threshold, with_extvp)
+    if key not in _CATALOGS:
+        tt, d, sch = dataset(scale, seed)
+        _CATALOGS[key] = build_catalog(tt, d, threshold=threshold,
+                                       with_extvp=with_extvp)
+    return _CATALOGS[key]
+
+
+def time_query(qtext: str, cat: Catalog, layout: str,
+               repeats: int = 3) -> Tuple[float, int]:
+    """(best-of-N seconds, result rows)."""
+    d = cat.dictionary
+    q = parse_sparql(qtext, d)
+    best = float("inf")
+    rows = 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = execute(q, cat, layout=layout)
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+        rows = len(res)
+    return best, rows
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows (the harness contract)."""
+
+    def __init__(self) -> None:
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str = "") -> None:
+        self.rows.append((name, seconds * 1e6, derived))
+
+    def emit(self) -> None:
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,146 @@
+"""§Perf hillclimbing driver: named variants of a dry-run cell, each a
+hypothesis about the dominant roofline term, re-lowered + re-analysed and
+appended to results/perf.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.perf_experiments \
+        --cell deepseek-moe-16b:train_4k --variant base,cap1.0,zero1 \
+        --out results/perf.jsonl
+
+Run inside a dry-run process (the module sets XLA_FLAGS itself on import
+via repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+# dryrun import MUST precede other jax usage: it forces 512 host devices
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS)
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import jax
+
+from repro.configs import get
+from repro.launch.dryrun import _raw_costs, analyze, build_cell, \
+    build_s2rdf_cell, corrected_costs, pick_unroll
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import model_flops
+from repro.models.config import SHAPES, MoEConfig
+
+
+# --- variant definitions: cfg transformers --------------------------------
+
+def _moe_cap(cfg, factor):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=factor))
+
+
+def _moe_blocked(cfg, nb=16):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dispatch_blocks=nb))
+
+
+VARIANTS: Dict[str, Callable] = {
+    "base": lambda cfg: cfg,
+    "noremat": lambda cfg: dataclasses.replace(cfg, remat=False),
+    "remat_all": lambda cfg: dataclasses.replace(cfg, remat=True),
+    "zero1": lambda cfg: dataclasses.replace(cfg, zero1=True),
+    "unroll2": lambda cfg: dataclasses.replace(cfg, scan_unroll=2),
+    "bf16params": lambda cfg: dataclasses.replace(cfg, param_dtype="bfloat16"),
+    "cap1.0": lambda cfg: _moe_cap(cfg, 1.0),
+    "cap2.0": lambda cfg: _moe_cap(cfg, 2.0),
+    "blocked": lambda cfg: _moe_blocked(cfg, 16),
+    "blocked_noremat": lambda cfg: dataclasses.replace(
+        _moe_blocked(cfg, 16), remat=False),
+    "blocked_cap1_noremat": lambda cfg: dataclasses.replace(
+        _moe_cap(_moe_blocked(cfg, 16), 1.0), remat=False),
+    "dp_decode": lambda cfg: dataclasses.replace(cfg, dp_only_decode=True),
+    "flash512": lambda cfg: dataclasses.replace(cfg, flash_chunk=512),
+    "flash1024": lambda cfg: dataclasses.replace(cfg, flash_chunk=1024),
+    "flash512_blocked_noremat": lambda cfg: dataclasses.replace(
+        _moe_blocked(cfg, 16), flash_chunk=512, remat=False),
+    "best_moe": lambda cfg: dataclasses.replace(
+        _moe_cap(_moe_blocked(cfg, 16), 1.0), flash_chunk=512, remat=False),
+    "best_moe_compress": lambda cfg: dataclasses.replace(
+        _moe_cap(_moe_blocked(cfg, 16), 1.0), flash_chunk=512, remat=False),
+    "dp_bf16": lambda cfg: dataclasses.replace(
+        cfg, dp_only_decode=True, param_dtype="bfloat16"),
+    "blocked8_cap1_noremat": lambda cfg: dataclasses.replace(
+        _moe_cap(_moe_blocked(cfg, 8), 1.0), remat=False),
+    "blocked_cap1_noremat": lambda cfg: dataclasses.replace(
+        _moe_cap(_moe_blocked(cfg, 16), 1.0), remat=False),
+    "flash512_only": lambda cfg: dataclasses.replace(cfg, flash_chunk=512),
+    "chunk32": lambda cfg: dataclasses.replace(cfg, ssm_chunk=32),
+    "chunk64": lambda cfg: dataclasses.replace(cfg, ssm_chunk=64),
+    "chunk128": lambda cfg: dataclasses.replace(cfg, ssm_chunk=128),
+    "chunk512": lambda cfg: dataclasses.replace(cfg, ssm_chunk=512),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str) -> Dict:
+    rec = {"arch": arch, "shape": shape, "variant": variant}
+    t0 = time.time()
+    cfg = VARIANTS[variant](get(arch))
+    cell = next(c for c in SHAPES if c.name == shape)
+    mesh = make_production_mesh()
+    compress = variant.endswith("_compress")
+    fn, structs = build_cell(cfg, cell, mesh, compress_grads=compress)
+    compiled = fn.lower(*structs).compile()
+    a1 = _raw_costs(compiled)
+    g, k = cfg.n_groups, pick_unroll(cfg.n_groups)
+    costs = None
+    if k > 1 and cfg.scan_unroll == 1:
+        cfg_k = dataclasses.replace(cfg, scan_unroll=k)
+        fn_k, structs_k = build_cell(cfg_k, cell, mesh)
+        ak = _raw_costs(fn_k.lower(*structs_k).compile())
+        costs = corrected_costs(a1, ak, g, k)
+    rec.update(analyze(compiled, 256, model_flops(cfg, cell), costs))
+    rec["status"] = "ok"
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_s2rdf_variant(variant: str) -> Dict:
+    """s2rdf variants: base (ExtVP) | vp (paper baseline layout) |
+    dual (ExtVP + o-partitioned copies) | vp_dual."""
+    rec = {"arch": "s2rdf", "shape": "-", "variant": variant}
+    t0 = time.time()
+    layout = "vp" if variant.startswith("vp") else "extvp"
+    dual = variant.endswith("dual")
+    ex, plan = build_s2rdf_cell("single", layout=layout, dual_partition=dual)
+    compiled = ex.lower().compile()
+    rec.update(analyze(compiled, 256, None))
+    rec["plan"] = plan.describe()
+    rec["status"] = "ok"
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape or s2rdf")
+    ap.add_argument("--variant", required=True, help="comma list")
+    ap.add_argument("--out", default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    for variant in args.variant.split(","):
+        if args.cell == "s2rdf":
+            rec = run_s2rdf_variant(variant)
+        else:
+            arch, shape = args.cell.split(":")
+            rec = run_variant(arch, shape, variant)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        brief = {k: rec.get(k) for k in
+                 ("arch", "shape", "variant", "dominant", "compute_s",
+                  "memory_s", "collective_s", "roofline_fraction", "wall_s")}
+        print(json.dumps(brief))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--scale`` sets the WatDiv
+scale factor (default 5.0 ≈ 1.5·10^5 triples — big enough that the
+paper's selectivity separation is visible on one CPU host; the paper's
+SF10000 ≈ 1.09·10^9 runs the same code on a cluster).  The roofline/perf
+numbers live in results/dryrun.jsonl (see launch/dryrun.py), not here —
+this harness measures the *running* engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import sec74_threshold, table2_load, table3_st, table4_basic, \
+    table5_il
+from benchmarks.common import Csv
+
+TABLES = {
+    "table2": table2_load.run,
+    "table3": table3_st.run,
+    "table4": table4_basic.run,
+    "table5": table5_il.run,
+    "sec74": sec74_threshold.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=5.0)
+    ap.add_argument("--only", default=None, choices=list(TABLES))
+    args = ap.parse_args()
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for name, fn in TABLES.items():
+        if args.only and name != args.only:
+            continue
+        fn(scale=args.scale, csv=csv)
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

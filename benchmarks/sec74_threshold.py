@@ -1,0 +1,45 @@
+"""Paper §7.4: the SF-threshold τ trade-off — store size vs retained
+performance benefit, swept over τ ∈ {0.1, 0.25, 0.5, 1.0}.
+
+The paper's claim: τ=0.25 cuts ExtVP from ~11n to ~2n tuples while
+keeping ~95% of the speedup."""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, catalog, time_query
+from repro.rdf.workloads import ST_QUERIES
+
+TAUS = (0.1, 0.25, 0.5, 1.0)
+
+
+def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
+    csv = csv or Csv()
+    # benefit metric: total ST-suite time per τ, relative to VP
+    cat_full = catalog(scale, threshold=1.0)
+    t_vp = sum(time_query(q, cat_full, "vp")[0] for q in ST_QUERIES.values())
+
+    base_gain = None
+    for tau in TAUS:
+        cat_t = catalog(scale, threshold=tau)
+        rep = cat_t.storage_report()
+        t_ext = sum(time_query(q, cat_t, "extvp")[0]
+                    for q in ST_QUERIES.values())
+        gain = t_vp - t_ext
+        if tau == 1.0:
+            base_gain = gain
+        csv.add(f"sec74/tau{tau}", t_ext,
+                f"tuples_xVP={rep['extvp_over_vp']:.2f}"
+                f";tables={int(rep['extvp_tables'])}"
+                f";vp_total={t_vp*1e6:.0f}us")
+    # retained-benefit summary (needs tau sweep above; base_gain set at 1.0)
+    for tau in TAUS[:-1]:
+        cat_t = catalog(scale, threshold=tau)
+        t_ext = sum(time_query(q, cat_t, "extvp")[0]
+                    for q in ST_QUERIES.values())
+        retained = (t_vp - t_ext) / max(base_gain, 1e-9)
+        csv.add(f"sec74/retained_tau{tau}", 0.0, f"{retained*100:.0f}%")
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,25 @@
+"""Paper Table 3 / Fig. 13: Selectivity Testing — ExtVP vs VP runtimes
+across the OS/SO/SS selectivity classes, plus the ST-8 statistics-only
+empties."""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, catalog, time_query
+from repro.rdf.workloads import ST_QUERIES
+
+
+def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
+    csv = csv or Csv()
+    cat = catalog(scale)
+    for name, qtext in ST_QUERIES.items():
+        t_ext, rows = time_query(qtext, cat, "extvp")
+        t_vp, rows_vp = time_query(qtext, cat, "vp")
+        assert rows == rows_vp, (name, rows, rows_vp)
+        speedup = t_vp / max(t_ext, 1e-9)
+        csv.add(f"table3/{name}/extvp", t_ext, f"rows={rows}")
+        csv.add(f"table3/{name}/vp", t_vp, f"speedup={speedup:.2f}x")
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -1,0 +1,46 @@
+"""Paper Table 4 / Fig. 14: Basic Testing (star/linear/snowflake/complex),
+ExtVP vs VP vs TT vs PT (Sempala-style) layouts, AM runtime over template
+instantiations and per-category aggregates."""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import Csv, catalog, dataset, time_query
+from repro.rdf.workloads import basic_queries
+
+
+def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
+    csv = csv or Csv()
+    tt, d, sch = dataset(scale)
+    cat = catalog(scale)
+    queries = basic_queries(sch, seed=42, n_instances=3)
+
+    cats = defaultdict(lambda: defaultdict(list))
+    for name, instances in queries.items():
+        per_layout = {}
+        for layout in ("extvp", "vp", "tt", "pt"):
+            times, rows = [], 0
+            for qtext in instances:
+                t, r = time_query(qtext, cat, layout, repeats=2)
+                times.append(t)
+                rows += r
+            am = sum(times) / len(times)
+            per_layout[layout] = (am, rows)
+            cats[name[0]][layout].append(am)
+        ext, vp, ttime, pt = (per_layout[k][0]
+                              for k in ("extvp", "vp", "tt", "pt"))
+        csv.add(f"table4/{name}/extvp", ext, f"rows={per_layout['extvp'][1]}")
+        csv.add(f"table4/{name}/vp", vp, f"speedup={vp/max(ext,1e-9):.2f}x")
+        csv.add(f"table4/{name}/tt", ttime, f"speedup={ttime/max(ext,1e-9):.2f}x")
+        csv.add(f"table4/{name}/pt", pt, f"speedup={pt/max(ext,1e-9):.2f}x")
+
+    for shape, layouts in sorted(cats.items()):
+        for layout, times in layouts.items():
+            am = sum(times) / len(times)
+            csv.add(f"table4/AM-{shape}/{layout}", am, f"n={len(times)}")
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

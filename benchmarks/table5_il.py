@@ -1,0 +1,32 @@
+"""Paper Table 5 / Fig. 15: Incremental Linear Testing — linear chains of
+diameter 5..10, user-bound / retailer-bound / unbound, ExtVP vs VP."""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv, catalog, dataset, time_query
+from repro.rdf.workloads import il_queries
+
+
+def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
+    csv = csv or Csv()
+    tt, d, sch = dataset(scale)
+    cat = catalog(scale)
+    il3_max = 6 if scale <= 2 else 5   # unbound chains grow ~linearly in |G|
+    queries = il_queries(sch, seed=42, n_instances=3, il3_max_diameter=il3_max)
+
+    for name, instances in sorted(queries.items()):
+        for layout in ("extvp", "vp"):
+            times, rows = [], 0
+            for qtext in instances:
+                t, r = time_query(qtext, cat, layout, repeats=2)
+                times.append(t)
+                rows = max(rows, r)
+            am = sum(times) / len(times)
+            csv.add(f"table5/{name}/{layout}", am, f"rows={rows}")
+    for diameter in range(il3_max + 1, 11):   # paper Table 5 'F' convention
+        csv.add(f"table5/IL-3-{diameter}/extvp", 0.0, "F(result-set-explosion)")
+    return csv
+
+
+if __name__ == "__main__":
+    run().emit()

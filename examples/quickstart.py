@@ -1,0 +1,70 @@
+"""Quickstart: the paper's running example (Figs. 1–12) end to end.
+
+Builds graph G1, constructs VP + ExtVP with statistics, compiles query Q1
+showing Algorithm-1 table selection + Algorithm-4 join ordering, and
+executes it on all three engines (eager / jitted-static / the VP
+baseline).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.compiler import compile_bgp
+from repro.core.executor import execute
+from repro.core.jexec import PlanExecutor
+from repro.core.sparql import parse_sparql
+from repro.core.stats import build_catalog
+from repro.rdf.dictionary import Dictionary
+
+
+def main() -> None:
+    # --- Fig. 1: RDF graph G1 -------------------------------------------------
+    triples = [
+        ("A", "follows", "B"), ("B", "follows", "C"), ("B", "follows", "D"),
+        ("C", "follows", "D"), ("A", "likes", "I1"), ("A", "likes", "I2"),
+        ("C", "likes", "I2"),
+    ]
+    d = Dictionary()
+    tt = d.encode_triples(triples)
+    print(f"G1: {len(tt)} triples, {len(d)} terms")
+
+    # --- §5: VP + ExtVP construction -------------------------------------------
+    cat = build_catalog(tt, d)
+    rep = cat.storage_report()
+    print(f"VP tables: {int(rep['vp_tables'])}  "
+          f"ExtVP materialized: {int(rep['extvp_tables'])}  "
+          f"(empty: {int(rep['extvp_empty'])}, identity: {int(rep['extvp_identity'])})")
+    f, l = d.id_of("follows"), d.id_of("likes")
+    print(f"SF(ExtVP^OS_follows|likes) = {cat.sf('OS', f, l)}   # Fig. 10: 0.25")
+
+    # --- §6: query Q1 -----------------------------------------------------------
+    q1 = parse_sparql(
+        "SELECT * WHERE { ?x likes ?w . ?x follows ?y . "
+        "?y follows ?z . ?z likes ?w }", d)
+    plan = compile_bgp(q1.root, cat)
+    print("\ncompiled plan (table selection + join order):")
+    print(" ", plan.describe())
+
+    res = execute(q1, cat)
+    rows = [{c: d.term_of(int(v)) for c, v in zip(res.cols, r)}
+            for r in res.data]
+    print("\nresult (paper: ?x→A ?y→B ?z→C ?w→I2):")
+    for r in rows:
+        print(" ", r)
+
+    # --- device path -------------------------------------------------------------
+    ex = PlanExecutor(plan, cat)
+    data, cols = ex.run()
+    print(f"\njitted static-shape engine agrees: "
+          f"{sorted(map(tuple, data.tolist())) == sorted(map(tuple, res.data[:, [res.cols.index(c) for c in cols]].tolist()))}")
+
+    # --- baseline comparison (align columns: join orders differ) --------------------
+    res_vp = execute(q1, cat, layout="vp")
+    aligned = res_vp.data[:, [res_vp.cols.index(c) for c in res.cols]]
+    print(f"VP baseline result identical: "
+          f"{sorted(map(tuple, aligned.tolist())) == sorted(map(tuple, res.data.tolist()))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""mamba2-370m [ssm] — 48L d1024, attention-free SSD blocks
+(d_state 128, headdim 64, expand 2 → d_inner 2048, 32 ssm heads),
+vocab 50280.  [arXiv:2405.21060]"""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=16, n_kv=16, d_ff=0,
+    vocab=50280,
+    group_pattern=(("mamba", "none"),),
+    ssm_expand=2, ssm_state=128, ssm_headdim=64, ssm_chunk=256,
+    tie_embeddings=True,
+    subquadratic=True,
+    # §Perf: 370M params replicate comfortably; DP-only decode removes the
+    # per-token model-axis collectives entirely (3.4x latency bound,
+    # EXPERIMENTS.md §Perf) — measured harmful for qwen-0.5b (fp32 param
+    # re-reads dominate), so set per-arch, not globally.
+    dp_only_decode=True,
+)

@@ -1,0 +1,20 @@
+"""S2RDF core: ExtVP partitioning schema + SPARQL query engine (the paper's
+primary contribution), in JAX-compatible form."""
+
+from repro.core.algebra import BGP, Query, TriplePattern
+from repro.core.compiler import Plan, compile_bgp, select_table
+from repro.core.executor import Bindings, execute, execute_plan
+from repro.core.sparql import parse_sparql
+from repro.core.stats import Catalog, build_catalog
+from repro.core.table import DeviceTable, Table
+from repro.core.vp import build_extvp, build_vp
+
+__all__ = [
+    "BGP", "Query", "TriplePattern",
+    "Plan", "compile_bgp", "select_table",
+    "Bindings", "execute", "execute_plan",
+    "parse_sparql",
+    "Catalog", "build_catalog",
+    "DeviceTable", "Table",
+    "build_extvp", "build_vp",
+]

@@ -1,0 +1,260 @@
+"""Static-shape jitted executor — the device (TPU) path of the engine.
+
+XLA requires static shapes, so every relation is a fixed-capacity buffer
+``(data[cap, k], n)`` with PAD rows past ``n``; every operator returns an
+overflow flag when a capacity would have been exceeded and the host re-runs
+the plan with doubled capacities (the standard static-buffer serving
+pattern).  Capacities are seeded from the catalog's ExtVP statistics — the
+same statistics the paper uses for join ordering — so overflows are rare.
+
+Join algorithm: sort-merge.  The probe side is key-sorted (XLA sort), the
+build side binary-searched (``jnp.searchsorted``), match counts expanded
+into output slots by a rank-search over the exclusive prefix sum.  All
+steps are O(n log n) vectorized primitives that map to TPU-friendly sort /
+gather / compare units — this is where the Pallas kernels of
+:mod:`repro.kernels` plug in for the probe phase.
+
+Join keys are single int32 columns (the first shared variable); any
+further shared variables are post-filtered after expansion — BGP joins
+share one variable in the overwhelming majority of cases (star/chain
+joins), and this keeps the engine int32-only (x64 mode stays off for the
+LM substrate).  Sentinels keep padded/NULL rows unmatched: probe-side pads
+→ ``A_SENT``, build-side pads → ``B_SENT`` (distinct, sort-max), UNBOUND
+values → per-side negative sentinels.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import Plan, ScanStep
+from repro.core.stats import Catalog
+from repro.core.table import round_up_pow2
+from repro.rdf.dictionary import PAD, UNBOUND
+from repro.core.algebra import is_var
+
+__all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan"]
+
+A_SENT = np.int32(2**31 - 1)   # probe-side padded-row key (== PAD)
+B_SENT = np.int32(2**31 - 2)   # build-side padded-row key (sort-max, != A_SENT)
+A_NULL = np.int32(-3)          # probe-side UNBOUND key
+B_NULL = np.int32(-5)          # build-side UNBOUND key
+
+
+@dataclass
+class JBindings:
+    """Static-shape relation: cols are trace-time metadata."""
+
+    cols: Tuple[str, ...]
+    data: jax.Array          # (cap, k) int32
+    n: jax.Array             # () int32
+    overflow: jax.Array      # () bool — sticky across operators
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+
+def _valid_mask(cap: int, n: jax.Array) -> jax.Array:
+    return jnp.arange(cap, dtype=jnp.int32) < n
+
+
+def _compact(data: jax.Array, keep: jax.Array, out_cap: int,
+             fill: int = PAD) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Move keep-rows to the front (stable); returns (data, n, overflow)."""
+    cap = data.shape[0]
+    n_keep = jnp.sum(keep, dtype=jnp.int32)
+    order = jnp.argsort(~keep, stable=True)           # keeps first
+    gathered = data[order]
+    if out_cap < cap:
+        gathered = gathered[:out_cap]
+    elif out_cap > cap:
+        padrows = jnp.full((out_cap - cap, data.shape[1]), fill, jnp.int32)
+        gathered = jnp.concatenate([gathered, padrows], axis=0)
+    mask = _valid_mask(out_cap, n_keep)
+    gathered = jnp.where(mask[:, None], gathered, fill)
+    return gathered, jnp.minimum(n_keep, out_cap), n_keep > out_cap
+
+
+def device_scan(rows: jax.Array, n: jax.Array, s_bound: Optional[int],
+                o_bound: Optional[int], same_var: bool,
+                out_cols: Sequence[int], out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Select + project one (s, o) table (Algorithm 2, device form)."""
+    cap = rows.shape[0]
+    keep = _valid_mask(cap, n)
+    if s_bound is not None:
+        keep &= rows[:, 0] == jnp.int32(s_bound)
+    if o_bound is not None:
+        keep &= rows[:, 1] == jnp.int32(o_bound)
+    if same_var:
+        keep &= rows[:, 0] == rows[:, 1]
+    projected = rows[:, list(out_cols)] if out_cols else rows[:, :0]
+    return _compact(projected, keep, out_cap)
+
+
+def device_join(a: JBindings, b: JBindings, out_cap: int) -> JBindings:
+    """Natural join of two static relations (sort-merge, rank expansion)."""
+    shared = [c for c in a.cols if c in b.cols]
+    b_only = [c for c in b.cols if c not in a.cols]
+    out_cols = a.cols + tuple(b_only)
+
+    cap_a, cap_b = a.capacity, b.capacity
+    if not shared:  # cross join (rare; bounded by caps)
+        ii = jnp.arange(out_cap, dtype=jnp.int32)
+        a_idx = ii // jnp.maximum(b.n, 1)
+        b_idx = ii % jnp.maximum(b.n, 1)
+        total = a.n * b.n
+        valid = ii < total
+        data = jnp.concatenate(
+            [a.data[jnp.clip(a_idx, 0, cap_a - 1)],
+             b.data[jnp.clip(b_idx, 0, cap_b - 1)]], axis=1)
+        data = jnp.where(valid[:, None], data, PAD)
+        return JBindings(out_cols, data, jnp.minimum(total, out_cap).astype(jnp.int32),
+                         a.overflow | b.overflow | (total > out_cap))
+
+    ka = a.data[:, a.cols.index(shared[0])]
+    kb = b.data[:, b.cols.index(shared[0])]
+    ka = jnp.where(ka == UNBOUND, A_NULL, ka)
+    kb = jnp.where(kb == UNBOUND, B_NULL, kb)
+    ka = jnp.where(_valid_mask(cap_a, a.n), ka, A_SENT)
+    kb = jnp.where(_valid_mask(cap_b, b.n), kb, B_SENT)
+
+    order_b = jnp.argsort(kb).astype(jnp.int32)
+    kb_sorted = kb[order_b]
+    lo = jnp.searchsorted(kb_sorted, ka, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(kb_sorted, ka, side="right").astype(jnp.int32)
+    cnt = hi - lo
+    prefix = jnp.cumsum(cnt) - cnt               # exclusive prefix
+    total = prefix[-1] + cnt[-1]
+
+    j = jnp.arange(out_cap, dtype=jnp.int32)
+    # rank search: which probe row produced output slot j
+    a_idx = jnp.searchsorted(prefix + cnt, j, side="right").astype(jnp.int32)
+    a_idx = jnp.clip(a_idx, 0, cap_a - 1)
+    off = j - prefix[a_idx]
+    b_pos = jnp.clip(lo[a_idx] + off, 0, cap_b - 1).astype(jnp.int32)
+    b_idx = order_b[b_pos]
+    valid = j < total
+
+    left = a.data[a_idx]
+    right = b.data[b_idx]
+
+    # post-filter shared columns beyond the key (SQL NULL semantics)
+    for c in shared[1:]:
+        va = left[:, a.cols.index(c)]
+        vb = right[:, b.cols.index(c)]
+        valid &= (va == vb) & (va != UNBOUND)
+
+    pieces = [left]
+    if b_only:
+        pieces.append(right[:, [b.cols.index(c) for c in b_only]])
+    data = jnp.concatenate(pieces, axis=1)
+    data, n, ovf = _compact(data, valid, out_cap)
+    return JBindings(out_cols, data, n,
+                     a.overflow | b.overflow | ovf | (total > out_cap))
+
+
+# ---------------------------------------------------------------------------
+# Plan executor
+# ---------------------------------------------------------------------------
+
+def _step_meta(step: ScanStep) -> Tuple[Optional[int], Optional[int], bool,
+                                        Tuple[int, ...], Tuple[str, ...]]:
+    tp = step.tp
+    s_bound = None if is_var(tp.s) else int(tp.s)
+    o_bound = None if is_var(tp.o) else int(tp.o)
+    same = is_var(tp.s) and is_var(tp.o) and tp.s == tp.o
+    cols: List[str] = []
+    take: List[int] = []
+    if is_var(tp.s):
+        cols.append(tp.s)
+        take.append(0)
+    if is_var(tp.o) and tp.o not in cols:
+        cols.append(tp.o)
+        take.append(1)
+    return s_bound, o_bound, same, tuple(take), tuple(cols)
+
+
+class PlanExecutor:
+    """Builds and runs the jitted static program for a compiled Plan.
+
+    ``caps[i]`` bounds the output of step i (step 0 = first scan; step i>0 =
+    i-th join output); scan caps are table capacities.  ``run`` retries
+    with doubled caps on overflow (host loop, geometric — at most
+    ~log2(result/estimate) recompiles, amortized across a served workload).
+    """
+
+    def __init__(self, plan: Plan, catalog: Catalog, slack: float = 1.5):
+        if plan.empty:
+            raise ValueError("cannot build executor for statistics-empty plan")
+        self.plan = plan
+        self.catalog = catalog
+        self.tables = []
+        self.caps: List[int] = []
+        est = 0.0
+        for i, step in enumerate(plan.steps):
+            if step.uses_tt:
+                raise NotImplementedError("device path requires bound predicates")
+            t = catalog.table(step.kind, int(step.tp.p), step.p2)
+            self.tables.append(t)
+            scan_est = max(1.0, float(len(t)))
+            if step.tp.n_bound() > 1:
+                scan_est = max(1.0, scan_est * 0.01)
+            est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
+            self.caps.append(round_up_pow2(int(est * slack) + 8, 16))
+
+    # -- the traced program --------------------------------------------------
+    def _program(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
+                 table_ns: List[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        plan = self.plan
+        acc: Optional[JBindings] = None
+        for i, step in enumerate(plan.steps):
+            s_bound, o_bound, same, take, cols = _step_meta(step)
+            data, n, ovf = device_scan(table_rows[i], table_ns[i], s_bound,
+                                       o_bound, same, take,
+                                       caps[i] if i == 0 else table_rows[i].shape[0])
+            cur = JBindings(cols, data, n, ovf)
+            if acc is None:
+                acc = cur
+            else:
+                acc = device_join(acc, cur, caps[i])
+        assert acc is not None
+        return acc.data, acc.n, acc.overflow
+
+    @functools.cached_property
+    def _jitted(self):
+        return jax.jit(self._program, static_argnums=(0,))
+
+    def lower(self, caps: Optional[Tuple[int, ...]] = None):
+        caps = caps or tuple(self.caps)
+        rows = [jax.ShapeDtypeStruct((round_up_pow2(len(t)), 2), jnp.int32)
+                for t in self.tables]
+        ns = [jax.ShapeDtypeStruct((), jnp.int32) for _ in self.tables]
+        return self._jitted.lower(caps, rows, ns)
+
+    def run(self, max_retries: int = 8) -> Tuple[np.ndarray, Tuple[str, ...]]:
+        rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
+        ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
+        caps = tuple(self.caps)
+        for _ in range(max_retries):
+            data, n, ovf = self._jitted(caps, rows, ns)
+            if not bool(ovf):
+                n = int(n)
+                cols = self._final_cols()
+                return np.asarray(data)[:n], cols
+            caps = tuple(c * 2 for c in caps)
+        raise RuntimeError("join capacity overflow after retries")
+
+    def _final_cols(self) -> Tuple[str, ...]:
+        cols: List[str] = []
+        for step in self.plan.steps:
+            for v in _step_meta(step)[4]:
+                if v not in cols:
+                    cols.append(v)
+        return tuple(cols)

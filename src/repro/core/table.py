@@ -1,0 +1,108 @@
+"""Relational table representations for the S2RDF engine.
+
+Two forms exist:
+
+* ``Table`` — host-side (numpy) exact-size two-column relation.  The
+  catalog (VP + ExtVP) lives in this form; it is the analogue of the
+  Parquet files S2RDF materializes in HDFS.  Tables are kept sorted by
+  subject, with a lazily-built object-sorted view, mirroring how a
+  Spark-side engine would keep sorted/clustered copies for merge joins
+  (and how RDF-3X/Hexastore keep permuted indexes).
+
+* ``DeviceTable`` — static-shape device form: rows padded to a power-of-two
+  capacity with ``PAD`` keys (which sort after all valid ids), plus a valid
+  count.  All jitted relational operators consume/produce this form, which
+  is what makes the engine XLA/TPU-compatible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.rdf.dictionary import PAD
+
+__all__ = ["Table", "DeviceTable", "pad_rows", "round_up_pow2"]
+
+
+def round_up_pow2(n: int, minimum: int = 8) -> int:
+    c = minimum
+    while c < n:
+        c *= 2
+    return c
+
+
+def pad_rows(rows: np.ndarray, capacity: int) -> np.ndarray:
+    """Pad (n, k) rows to (capacity, k) with PAD."""
+    n, k = rows.shape
+    assert capacity >= n, (capacity, n)
+    out = np.full((capacity, k), PAD, dtype=np.int32)
+    out[:n] = rows
+    return out
+
+
+@dataclass
+class Table:
+    """Host-side two-column relation (s, o), sorted by s."""
+
+    rows: np.ndarray  # (n, 2) int32, sorted by (s, o)
+
+    def __post_init__(self) -> None:
+        self.rows = np.asarray(self.rows, dtype=np.int32).reshape(-1, 2)
+
+    @staticmethod
+    def from_unsorted(rows: np.ndarray) -> "Table":
+        rows = np.asarray(rows, dtype=np.int32).reshape(-1, 2)
+        order = np.lexsort((rows[:, 1], rows[:, 0]))
+        return Table(rows[order])
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    @property
+    def s(self) -> np.ndarray:
+        return self.rows[:, 0]
+
+    @property
+    def o(self) -> np.ndarray:
+        return self.rows[:, 1]
+
+    @cached_property
+    def rows_by_o(self) -> np.ndarray:
+        """(n, 2) rows sorted by (o, s) — the object-clustered view."""
+        order = np.lexsort((self.rows[:, 0], self.rows[:, 1]))
+        return self.rows[order]
+
+    @cached_property
+    def unique_s(self) -> np.ndarray:
+        return np.unique(self.rows[:, 0])
+
+    @cached_property
+    def unique_o(self) -> np.ndarray:
+        return np.unique(self.rows[:, 1])
+
+    def nbytes(self) -> int:
+        return int(self.rows.nbytes)
+
+    def to_device(self, capacity: Optional[int] = None) -> "DeviceTable":
+        cap = capacity or round_up_pow2(len(self.rows))
+        return DeviceTable(pad_rows(self.rows, cap), np.int32(len(self.rows)))
+
+
+@dataclass
+class DeviceTable:
+    """Static-shape device relation: (capacity, 2) rows + valid count."""
+
+    rows: np.ndarray  # (capacity, 2) int32, valid prefix sorted by s, PAD tail
+    n: np.ndarray     # int32 scalar
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    def to_host(self) -> Table:
+        n = int(self.n)
+        return Table(np.asarray(self.rows)[:n])

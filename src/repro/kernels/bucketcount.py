@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: shuffle-bucket histogram.
+
+The distributed engine's repartition step (core/distributed.py) needs
+per-destination counts (``dest = key % n_shards``) to size its all_to_all
+buckets and detect overflow.  As with the join kernels, the TPU-natural
+shape is a tiled broadcast-compare: each program takes a (1, TILE) key
+block and produces the (1, NB) partial histogram via a (TILE, NB)
+equality compare summed over lanes, accumulated across the key grid into
+the single output block.
+
+Padding: invalid keys are PROBE_PAD (2^31 - 1); ``PAD % n_buckets`` would
+alias a real bucket, so the kernel masks pads explicitly before counting.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_count_kernel", "bucket_count_pallas", "TILE"]
+
+TILE = 1024
+PAD = np.int32(2**31 - 1)
+
+
+def bucket_count_kernel(keys_ref, out_ref, *, n_buckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]                          # (1, TILE)
+    valid = keys != PAD
+    dest = jnp.where(valid, keys % n_buckets, n_buckets)
+    buckets = jnp.arange(n_buckets, dtype=jnp.int32)
+    hits = (dest[0, :, None] == buckets[None, :]).astype(jnp.int32)
+    out_ref[...] = out_ref[...] + jnp.sum(hits, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def bucket_count_pallas(keys: jax.Array, n_buckets: int,
+                        interpret: bool = True) -> jax.Array:
+    """Histogram of keys % n_buckets over non-PAD keys; len(keys) must be
+    a TILE multiple (callers pad with PAD)."""
+    n = keys.shape[0]
+    assert n % TILE == 0, n
+    grid = (n // TILE,)
+    out = pl.pallas_call(
+        functools.partial(bucket_count_kernel, n_buckets=n_buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.int32),
+        interpret=interpret,
+    )(keys.reshape(n // TILE, TILE))
+    return out[0]

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles the padding / sentinel conventions so callers pass ragged int32
+key arrays:
+
+* probe side padded with ``PROBE_PAD = 2^31 - 1``
+* build side padded with ``BUILD_PAD = 2^31 - 2``
+
+The two sentinels differ, so padded lanes never produce false matches,
+and ``BUILD_PAD`` sorts above every valid id, so a padded build side stays
+ascending.  On CPU the kernels run in ``interpret=True`` mode (Python
+execution of the kernel body — correct but slow); on TPU they compile.
+Set ``use_pallas(False)`` to route everything through the pure-jnp refs
+(the default on CPU for speed; tests exercise both paths explicitly).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bucketcount, mergejoin, ref, semijoin
+
+__all__ = ["semijoin_mask", "join_probe", "bucket_count", "use_pallas",
+           "pallas_enabled", "PROBE_PAD", "BUILD_PAD"]
+
+PROBE_PAD = np.int32(2**31 - 1)
+BUILD_PAD = np.int32(2**31 - 2)
+
+_STATE = {"use_pallas": False}  # CPU default: jnp reference path
+
+
+def use_pallas(enabled: bool) -> None:
+    _STATE["use_pallas"] = enabled
+
+
+def pallas_enabled() -> bool:
+    return _STATE["use_pallas"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0 and n > 0:
+        return x
+    return jnp.concatenate([x, jnp.full((max(rem, mult if n == 0 else rem),),
+                                        fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas",))
+def semijoin_mask(probe: jax.Array, build_sorted: jax.Array,
+                  force_pallas: bool = False) -> jax.Array:
+    """mask[i] = probe[i] ∈ build_sorted (int32 0/1), any lengths ≥ 0."""
+    if not (force_pallas or _STATE["use_pallas"]):
+        return ref.semijoin_membership_ref(probe, build_sorted)
+    n = probe.shape[0]
+    a = _pad_to(probe.astype(jnp.int32), semijoin.TILE_A, PROBE_PAD)
+    b = _pad_to(build_sorted.astype(jnp.int32), semijoin.TILE_B, BUILD_PAD)
+    out = semijoin.semijoin_membership_pallas(a, b, interpret=_interpret())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("force_pallas",))
+def join_probe(probe: jax.Array, build_sorted: jax.Array,
+               force_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """(lo, cnt) per probe key against the ascending build side."""
+    if not (force_pallas or _STATE["use_pallas"]):
+        return ref.join_probe_ref(probe, build_sorted)
+    n = probe.shape[0]
+    n_b = build_sorted.shape[0]
+    a = _pad_to(probe.astype(jnp.int32), mergejoin.TILE_A, PROBE_PAD)
+    b = _pad_to(build_sorted.astype(jnp.int32), mergejoin.TILE_B, BUILD_PAD)
+    lo, cnt = mergejoin.join_probe_pallas(a, b, interpret=_interpret())
+    # padded build rows sort above all valid keys; they can inflate lo only
+    # for probe keys >= BUILD_PAD (i.e. probe pads), which callers discard.
+    return jnp.minimum(lo[:n], n_b), cnt[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "force_pallas"))
+def bucket_count(keys: jax.Array, valid: jax.Array, n_buckets: int,
+                 force_pallas: bool = False) -> jax.Array:
+    """Histogram of keys % n_buckets over valid rows (shuffle planning)."""
+    if not (force_pallas or _STATE["use_pallas"]):
+        return ref.bucket_count_ref(keys, valid, n_buckets)
+    masked = jnp.where(valid, keys.astype(jnp.int32), PROBE_PAD)
+    padded = _pad_to(masked, bucketcount.TILE, PROBE_PAD)
+    return bucketcount.bucket_count_pallas(padded, n_buckets,
+                                           interpret=_interpret())

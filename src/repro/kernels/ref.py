@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match (asserted with
+``assert_allclose`` across shape/dtype sweeps in tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["semijoin_membership_ref", "join_probe_ref", "bucket_count_ref"]
+
+
+def semijoin_membership_ref(probe: jnp.ndarray, build_sorted: jnp.ndarray) -> jnp.ndarray:
+    """mask[i] = probe[i] ∈ build_sorted  (int32 0/1).
+
+    ``build_sorted`` must be ascending.  Padding convention: PAD values on
+    either side never match because the two sides use distinct pad
+    sentinels (2^31-1 for probe, 2^31-2 for build).
+    """
+    lo = jnp.searchsorted(build_sorted, probe, side="left")
+    hi = jnp.searchsorted(build_sorted, probe, side="right")
+    return (hi > lo).astype(jnp.int32)
+
+
+def join_probe_ref(probe: jnp.ndarray, build_sorted: jnp.ndarray):
+    """(lo, cnt): lower-bound index and match count of each probe key in the
+    sorted build side — the two arrays the sort-merge join expansion needs."""
+    lo = jnp.searchsorted(build_sorted, probe, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(build_sorted, probe, side="right").astype(jnp.int32)
+    return lo, hi - lo
+
+
+def bucket_count_ref(keys: jnp.ndarray, valid: jnp.ndarray, n_buckets: int):
+    """Histogram of keys % n_buckets over valid rows (shuffle planning)."""
+    dest = jnp.where(valid, keys.astype(jnp.uint32) % n_buckets, n_buckets)
+    return jnp.bincount(dest, length=n_buckets + 1)[:n_buckets].astype(jnp.int32)

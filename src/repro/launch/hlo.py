@@ -1,0 +1,107 @@
+"""HLO analysis: collective-byte accounting for the roofline model.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic,
+so we parse the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction contributes its *operand* bytes (what a chip puts on the
+wire).  Operand shapes are resolved from the defining instructions, so
+the parser handles both inline-typed operands and name-only references.
+
+The estimator is deliberately simple (matching the brief's three-term
+model): collective seconds = bytes / (chips × ICI link bandwidth).  Ring
+algorithms move ~2× the payload for all-reduce — recorded as a separate
+"weighted" figure for the §Perf discussion.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["collective_bytes", "parse_hlo_shapes", "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[16,4096,128]{2,1,0}   or   f32[] or (tuple, ...)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[\d,]*)\]")
+# NOTE: tuple types may contain /*index=5*/ comments (hence [^)] not [^=])
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z]+\d*\[[\d,]*\][^\s]*)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)\)", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        nbytes = _DTYPE_BYTES.get(m.group("dt"))
+        if nbytes is None:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def parse_hlo_shapes(hlo: str) -> Dict[str, int]:
+    """instruction name -> output bytes."""
+    out: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo):
+        out[m.group("name")] = _shape_bytes(m.group("type"))
+    return out
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum of operand bytes per collective kind + totals.
+
+    Returns {kind: bytes, ..., 'total': ..., 'weighted': ...} where
+    'weighted' applies ring-cost factors (all-reduce 2(n-1)/n ≈ 2×,
+    all-gather/reduce-scatter (n-1)/n ≈ 1×, all-to-all (n-1)/n ≈ 1×,
+    collective-permute 1×)."""
+    shapes = parse_hlo_shapes(hlo)
+    per_kind: Dict[str, float] = defaultdict(float)
+
+    for m in _INSTR_RE.finditer(hlo):
+        op = m.group("op")
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        args = m.group("args")
+        # operand bytes: inline-typed args or name lookups
+        nbytes = 0
+        inline = _shape_bytes(args)
+        if inline:
+            nbytes = inline
+        else:
+            for ref in re.finditer(r"%?([\w\.\-]+)", args):
+                nbytes += shapes.get(ref.group(1), 0)
+        # for all-gather the operand is the shard; for reduce-scatter the
+        # full input; either way operand bytes = what leaves the chip.
+        per_kind[kind] += nbytes
+
+    weights = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    total = sum(per_kind.values())
+    weighted = sum(v * weights[k] for k, v in per_kind.items())
+    out = dict(per_kind)
+    out["total"] = total
+    out["weighted"] = weighted
+    return out

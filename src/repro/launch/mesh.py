@@ -1,0 +1,47 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod = (16, 16) ("data", "model") =
+256 chips (one v5e pod slice); multi-pod adds a leading "pod"=2 axis
+(512 chips).  The dry-run process forces 512 host devices; the single-pod
+mesh then uses the first 256 (a pod is a contiguous ICI domain — device
+order matters on real hardware and jax.devices() preserves it).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_query_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) > n:
+        devices = devices[:n]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_query_mesh(n_shards: Optional[int] = None, *, multi_pod: bool = False):
+    """1-D mesh for the S2RDF engine: relational plans have no 'model'
+    dimension, so queries flatten every chip onto a single 'data' axis."""
+    n = n_shards or (512 if multi_pod else 256)
+    devices = jax.devices()
+    if len(devices) > n:
+        devices = devices[:n]
+    return jax.make_mesh((n,), ("data",), devices=devices)
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline model (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+    HBM_BW = 819e9                # B/s
+    ICI_BW = 50e9                 # B/s per link (~3 links usable/chip on 2D torus)
+    HBM_BYTES = 16 * 2**30        # 16 GiB

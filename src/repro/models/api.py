@@ -1,0 +1,173 @@
+"""Unified model API over all families (decoder-only / MoE / hybrid / SSM
+/ enc-dec / VLM): init, loss, prefill, decode, input specs per shape cell.
+
+This is the single surface the launcher, dry-run, trainers and tests go
+through — per-family dispatch lives here and nowhere else.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, transformer
+from repro.models.config import ArchConfig, ShapeCell
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key) -> Params:
+        if self.cfg.enc_dec:
+            return encdec.init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    # -- training --------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        if self.cfg.enc_dec:
+            return encdec.seq2seq_loss(params, batch, self.cfg)
+        return transformer.lm_loss(params, batch, self.cfg)
+
+    # -- serving -----------------------------------------------------------------
+    def prefill(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        if self.cfg.enc_dec:
+            enc_out = encdec.encode(params, batch["frames"], self.cfg)
+            logits = encdec.decode_train(params, batch["tokens"], enc_out, self.cfg)
+            return logits[:, -1:]
+        return transformer.prefill(params, batch["tokens"], self.cfg,
+                                   batch.get("patches"))
+
+    def init_caches(self, params_or_none, batch: int, s_max: int) -> Params:
+        if self.cfg.enc_dec:
+            return encdec.init_caches(params_or_none, self.cfg, batch, s_max)
+        return transformer.init_caches(self.cfg, batch, s_max)
+
+    def decode(self, params: Params, caches: Params, tokens: jax.Array,
+               pos: jax.Array):
+        if self.cfg.enc_dec:
+            return encdec.decode_step(params, caches, tokens, pos, self.cfg)
+        return transformer.decode_step(params, caches, tokens, pos, self.cfg)
+
+    # -- shape cells ---------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell
+        (no allocation).  For decode cells this includes the caches."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        act = jnp.dtype(cfg.dtype)
+
+        def tok(shape):
+            return jax.ShapeDtypeStruct(shape, i32)
+
+        if cell.kind == "train":
+            if cfg.enc_dec:
+                return {"frames": jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), act),
+                        "tokens": tok((B, S)), "labels": tok((B, S))}
+            if cfg.vlm:
+                s_text = S - cfg.n_patches
+                return {"tokens": tok((B, s_text)), "labels": tok((B, s_text)),
+                        "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), act)}
+            return {"tokens": tok((B, S)), "labels": tok((B, S))}
+
+        if cell.kind == "prefill":
+            if cfg.enc_dec:
+                return {"frames": jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), act),
+                        "tokens": tok((B, S))}
+            if cfg.vlm:
+                return {"tokens": tok((B, S - cfg.n_patches)),
+                        "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), act)}
+            return {"tokens": tok((B, S))}
+
+        assert cell.kind == "decode"
+        caches = jax.eval_shape(
+            lambda: self.init_caches(
+                jax.eval_shape(lambda k: self.init(k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+                if cfg.enc_dec else None, B, S))
+        return {"tokens": tok((B, 1)),
+                "pos": jax.ShapeDtypeStruct((), i32),
+                "caches": caches}
+
+    # -- synthetic batches for smoke tests / examples ---------------------------------
+    def dummy_batch(self, cell: ShapeCell, key) -> Dict[str, jax.Array]:
+        specs = self.input_specs(cell)
+
+        def make(path, s):
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            if s.dtype == jnp.int32 and ("tokens" in name or "labels" in name):
+                return jax.random.randint(key, s.shape, 0, self.cfg.vocab, jnp.int32)
+            if s.dtype == jnp.int32:
+                return jnp.zeros(s.shape, jnp.int32)
+            return jnp.zeros(s.shape, s.dtype)
+
+        return jax.tree_util.tree_map_with_path(
+            make, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference
+    (forward only) — the §Roofline 'useful compute' yardstick."""
+    n_active = active_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Active (per-token) parameter count, analytic."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv
+    attn_p = d * hd * (h + 2 * kv) + h * hd * d
+    dense_p = 3 * d * ff
+    m = cfg.moe
+    moe_active = 3 * d * m.d_ff_expert * m.top_k + \
+        3 * d * m.d_ff_shared * m.n_shared + d * m.n_experts
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ssm_p = 2 * d * di + 2 * d * n + d * (di // max(cfg.ssm_headdim, 1)) \
+        + di * d + cfg.ssm_conv * (di + 2 * n)
+
+    total = v * d  # embedding (active on input+output)
+    if not cfg.tie_embeddings:
+        total += v * d
+
+    def block_cost(spec):
+        mixer, mlp = spec
+        c = 0.0
+        if mixer in ("attn", "attn_local"):
+            c += attn_p
+        elif mixer == "mamba":
+            c += ssm_p
+        if mlp == "dense":
+            c += dense_p
+        elif mlp == "moe":
+            c += moe_active
+        return c
+
+    if cfg.first_layer_override:
+        total += block_cost(cfg.first_layer_override)
+    per_group = sum(block_cost(s) for s in cfg.group_pattern)
+    total += per_group * cfg.n_groups
+    if cfg.enc_dec:
+        total += cfg.n_enc_layers * (attn_p + 2 * d * ff) \
+            + cfg.n_layers * attn_p  # cross attention
+    return float(total)
+
+
+def total_params(cfg: ArchConfig) -> float:
+    """Total parameter count (MoE experts all counted)."""
+    m = cfg.moe
+    if not m.n_experts:
+        return active_params(cfg)
+    moe_total_minus_active = 3 * cfg.d_model * m.d_ff_expert * (m.n_experts - m.top_k)
+    n_moe_layers = sum(1 for s in cfg.group_pattern if s[1] == "moe") * cfg.n_groups
+    return active_params(cfg) + moe_total_minus_active * n_moe_layers

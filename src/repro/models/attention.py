@@ -1,0 +1,214 @@
+"""GQA attention with global/local (sliding-window) masking and a static
+KV-cache decode path.
+
+Shapes:  x (B, S, D);  q (B, S, H, hd);  k/v (B, S, KV, hd);  GQA repeats
+each KV head across H/KV query heads via reshape-free broadcasting in the
+einsum (q grouped as (B, S, KV, H/KV, hd)) — no materialized repeat.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _init, apply_rope, rope_angles
+
+Params = Dict[str, Any]
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": _init(ks[0], (d, h, hd), s, dtype),
+        "wk": _init(ks[1], (d, kv, hd), s, dtype),
+        "wv": _init(ks[2], (d, kv, hd), s, dtype),
+        "wo": _init(ks[3], (h, hd, d), 1.0 / np.sqrt(h * hd), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ArchConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _mask(sq: int, skv: int, offset, local_window: Optional[int]) -> jax.Array:
+    """(sq, skv) bool mask.  offset = absolute position of query 0 minus
+    absolute position of key 0 (0 for self-attn train/prefill)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if local_window is not None:
+        m &= kj > qi - local_window
+    return m
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Skv,KV,hd) -> (B,Sq,H,hd), GQA grouped."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(cfg.hd)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig, local: bool,
+                  chunk: int) -> jax.Array:
+    """Flash-style self-attention (§Perf): online-softmax over KV chunks.
+
+    Never materializes the (Sq, Skv) score tensor — peak intermediate is
+    (B, KV, G, Sq, chunk) — cutting attention HBM traffic by ~Skv/chunk
+    and bounding VMEM-resident working sets the way a fused TPU attention
+    kernel does.  Causal and sliding-window masks are applied per chunk
+    from position arithmetic.  Exact (not approximate): equivalence vs
+    the dense path is asserted in tests/test_arch_smoke.py.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    assert sq % 1 == 0 and k.shape[1] % chunk == 0, (sq, k.shape, chunk)
+    nc = k.shape[1] // chunk
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / np.sqrt(cfg.hd)
+    q_pos = jnp.arange(sq)
+
+    # trace-time chunk loop (nc is small and static): exact cost accounting
+    # on the CPU analysis backend AND the blocked live-set that a fused TPU
+    # attention kernel would have — a causal chunk j only exists while
+    # processed.  Fully-masked chunks (j ahead of every query) are elided
+    # AT TRACE TIME below, so sliding-window layers do ~window/S of the work.
+    m = jnp.full((b, kvh, g, sq), -1e30, jnp.float32)
+    l = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc = jnp.zeros((b, sq, kvh, g, hd), q.dtype)
+    for j in range(nc):
+        k_lo = j * chunk
+        if k_lo > sq - 1:       # entirely above the causal diagonal
+            continue
+        kj = k[:, k_lo:k_lo + chunk]
+        vj = v[:, k_lo:k_lo + chunk]
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kj).astype(jnp.float32) * scale
+        k_pos = k_lo + jnp.arange(chunk)
+        msk = k_pos[None, :] <= q_pos[:, None]          # (sq, chunk)
+        if local:
+            msk &= k_pos[None, :] > q_pos[:, None] - cfg.sliding_window
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(q.dtype), vj)
+        acc = acc * jnp.moveaxis(corr, -1, 1)[..., None].astype(acc.dtype) + pv
+        m = m_new
+    linv = (1.0 / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    out = acc * jnp.moveaxis(linv, -1, 1)[..., None]
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(p: Params, x: jax.Array, cfg: ArchConfig,
+              local: bool = False,
+              positions: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention over the full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = positions if positions is not None else jnp.arange(s)
+    sin, cos = rope_angles(pos, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if cfg.flash_chunk and s % cfg.flash_chunk == 0 and s > cfg.flash_chunk:
+        o = _sdpa_chunked(q, k, v, cfg, local, cfg.flash_chunk)
+    else:
+        mask = _mask(s, s, 0, cfg.sliding_window if local else None)
+        o = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def attention_bidir(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Bidirectional self-attention (whisper encoder)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    sin, cos = rope_angles(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    mask = jnp.ones((s, s), bool)
+    o = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def init_cross_attention(key, cfg: ArchConfig, dtype) -> Params:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ArchConfig) -> jax.Array:
+    """x (B,Sq,D) attends over precomputed encoder (k, v) (B,Senc,KV,hd)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    k, v = enc_kv
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    o = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def encoder_kv(p: Params, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (static KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(p: Params, x: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, pos: jax.Array, cfg: ArchConfig,
+                     write_pos: Optional[jax.Array] = None):
+    """One-token decode.  x (B, 1, D); caches (B, S_cache, KV, hd); ``pos``
+    is the absolute position (drives RoPE + validity mask); ``write_pos``
+    the cache slot (== pos for global layers, pos % window for the ring
+    cache of sliding-window layers — ring entries are all within the
+    window by construction, so validity is just "slot already written").
+    Returns (out, k_cache, v_cache)."""
+    b, _, _ = x.shape
+    s_cache = k_cache.shape[1]
+    wp = pos if write_pos is None else write_pos
+    q, k, v = _qkv(p, x, cfg)
+    sin, cos = rope_angles(pos[None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), wp, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), wp, axis=1)
+
+    kj = jnp.arange(s_cache)
+    mask = (kj <= pos) | jnp.full((s_cache,), pos >= s_cache)
+    o = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+              mask[None, :], cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache

@@ -1,0 +1,169 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model) — the
+transformer backbone (12+12 layers for whisper-small) is the real system
+under test.  Encoder layers are bidirectional; decoder layers interleave
+causal self-attention, cross-attention over the encoder output, and GELU
+FFNs.  Both stacks lower as ``lax.scan`` over per-layer-stacked params.
+
+Decode state = causal self-KV caches plus the cross K/V projections
+computed once from the encoder output (the standard serving split).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ArchConfig
+from repro.models.layers import (embed, gelu_mlp, init_embed, init_gelu_mlp,
+                                 init_layernorm, layernorm)
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    pdt = jnp.dtype(cfg.param_dtype)
+    k = jax.random.split(key, 6)
+
+    def enc_layer(kk):
+        k1, k2 = jax.random.split(kk)
+        return {
+            "attn": attn.init_attention(k1, cfg, pdt),
+            "attn_norm": init_layernorm(cfg.d_model, pdt),
+            "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, pdt),
+            "mlp_norm": init_layernorm(cfg.d_model, pdt),
+        }
+
+    def dec_layer(kk):
+        k1, k2, k3 = jax.random.split(kk, 3)
+        return {
+            "self": attn.init_attention(k1, cfg, pdt),
+            "self_norm": init_layernorm(cfg.d_model, pdt),
+            "cross": attn.init_cross_attention(k2, cfg, pdt),
+            "cross_norm": init_layernorm(cfg.d_model, pdt),
+            "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, pdt),
+            "mlp_norm": init_layernorm(cfg.d_model, pdt),
+        }
+
+    return {
+        "embed": init_embed(k[0], cfg.vocab, cfg.d_model, pdt),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(k[1], cfg.n_enc_layers)),
+        "enc_norm": init_layernorm(cfg.d_model, pdt),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(k[2], cfg.n_layers)),
+        "dec_norm": init_layernorm(cfg.d_model, pdt),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+    x = frames.astype(_dt(cfg))
+
+    def body(xc, lp):
+        h = layernorm(lp["attn_norm"], xc, cfg.norm_eps)
+        xc = xc + attn.attention_bidir(lp["attn"], h, cfg)
+        h = layernorm(lp["mlp_norm"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        return xc, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params: Params, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig) -> jax.Array:
+    """Teacher-forced decoder -> logits (B, S, V)."""
+    dt = _dt(cfg)
+    x = embed(params["embed"], tokens, dt)
+
+    def body(xc, lp):
+        h = layernorm(lp["self_norm"], xc, cfg.norm_eps)
+        xc = xc + attn.attention(lp["self"], h, cfg)
+        h = layernorm(lp["cross_norm"], xc, cfg.norm_eps)
+        kv = attn.encoder_kv(lp["cross"], enc_out)
+        xc = xc + attn.cross_attention(lp["cross"], h, kv, cfg)
+        h = layernorm(lp["mlp_norm"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        return xc, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(dt))
+
+
+def seq2seq_loss(params: Params, batch: Dict[str, jax.Array],
+                 cfg: ArchConfig) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg)
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = batch["labels"][:, 1:]
+    mask = (tg >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, jnp.maximum(tg, 0)[..., None], axis=-1)[..., 0]
+    return ((lse - picked) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_caches(params: Params, cfg: ArchConfig, batch: int, s_max: int,
+                enc_out: Optional[jax.Array] = None) -> Params:
+    """Self-KV caches + per-layer cross K/V from the encoder output."""
+    dt = _dt(cfg)
+    L = cfg.n_layers
+    caches: Params = {
+        "k": jnp.zeros((L, batch, s_max, cfg.n_kv, cfg.hd), dt),
+        "v": jnp.zeros((L, batch, s_max, cfg.n_kv, cfg.hd), dt),
+    }
+    if enc_out is None:
+        enc_out = jnp.zeros((batch, cfg.n_frames, cfg.d_model), dt)
+
+    def cross_kv(lp):
+        k, v = attn.encoder_kv(lp["cross"], enc_out)
+        return k.astype(dt), v.astype(dt)
+
+    ck, cv = jax.lax.map(cross_kv, params["dec_layers"])
+    caches["cross_k"], caches["cross_v"] = ck, cv
+    return caches
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig):
+    dt = _dt(cfg)
+    x = embed(params["embed"], tokens, dt)
+
+    def body(xc, scanned):
+        lp, kc, vc, ck, cv = scanned
+        h = layernorm(lp["self_norm"], xc, cfg.norm_eps)
+        o, kc, vc = attn.attention_decode(lp["self"], h, kc, vc, pos, cfg)
+        xc = xc + o
+        h = layernorm(lp["cross_norm"], xc, cfg.norm_eps)
+        xc = xc + attn.cross_attention(lp["cross"], h,
+                                       (ck.astype(xc.dtype), cv.astype(xc.dtype)),
+                                       cfg)
+        h = layernorm(lp["mlp_norm"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        return xc, (kc, vc)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["k"], caches["v"],
+                  caches["cross_k"], caches["cross_v"]),
+        unroll=cfg.scan_unroll)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(dt))
+    new_caches = dict(caches)
+    new_caches["k"], new_caches["v"] = nk, nv
+    return logits, new_caches

@@ -1,0 +1,132 @@
+"""Primitive layers: norms, embeddings, RoPE, dense projections, MLPs.
+
+Pure-functional: parameters are plain dict pytrees; every init function
+returns (params, ...) and every apply function takes (params, x).
+Parameters for the scanned layer stack carry a leading (n_groups,) axis —
+see transformer.py.  dtype policy: params in ``param_dtype`` (fp32 by
+default), activations in ``dtype`` (bf16) — matmuls run bf16 on the MXU
+with fp32 accumulation (XLA default for dot_general on TPU).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def _init(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": _init(key, (vocab, d), 1.0 / np.sqrt(d), dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in fp32 for loss stability."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, hd: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape positions.shape + (hd/2,), fp32."""
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); sin/cos: (..., S, hd/2) broadcast over heads."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": _init(k1, (d, d_ff), s_in, dtype),
+        "w_up": _init(k2, (d, d_ff), s_in, dtype),
+        "w_down": _init(k3, (d_ff, d), s_out, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU (the assigned families all use gated MLPs)."""
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dt))
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> Params:
+    """Non-gated GELU MLP (whisper encoder/decoder FFN)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": _init(k1, (d, d_ff), 1.0 / np.sqrt(d), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": _init(k2, (d_ff, d), 1.0 / np.sqrt(d_ff), dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt)) + p["b_in"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt)) + p["b_out"].astype(dt)

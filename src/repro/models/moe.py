@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Routing is GShard/Switch-style top-k with a static per-expert capacity
+``C = ceil(T·k/E · capacity_factor)`` (tokens over capacity are dropped —
+their residual path still carries them).  Dispatch avoids the O(T·E·C)
+one-hot einsum entirely: assignments are *sorted by expert* and each
+token's slot is its rank within its expert's run — the same
+sort + rank-search machinery the relational engine uses for joins, which
+keeps everything O(T·k log T·k) in sort/gather primitives.
+
+Expert compute is a single batched einsum over the (E, C, D) dispatch
+buffer, so sharding E over the mesh's ``model`` axis gives expert
+parallelism with XLA inserting the token all-to-alls.
+
+DeepSeekMoE extras: ``n_shared`` always-on shared experts (dense SwiGLU
+over the full d_ff_shared) added to the routed output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _init, init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(np.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(m.d_ff_expert)
+    p: Params = {
+        "router": _init(ks[0], (d, m.n_experts), s_in, jnp.float32),
+        "w_gate": _init(ks[1], (m.n_experts, d, m.d_ff_expert), s_in, dtype),
+        "w_up": _init(ks[2], (m.n_experts, d, m.d_ff_expert), s_in, dtype),
+        "w_down": _init(ks[3], (m.n_experts, m.d_ff_expert, d), s_out, dtype),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], d, m.d_ff_shared * m.n_shared, dtype)
+    return p
+
+
+def moe_layer(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x (B, S, D) -> (B, S, D)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    if m.dispatch_blocks and b % m.dispatch_blocks == 0:
+        # blocked data-local dispatch (§Perf): vmap the whole routing over
+        # batch blocks; per-block capacity keeps totals identical.
+        nb = m.dispatch_blocks
+        xb = x.reshape(nb, (b // nb) * s, d)
+        yb = jax.vmap(lambda xi: _dispatch_compute(p, xi, cfg))(xb)
+        return yb.reshape(b, s, d)
+    return _dispatch_compute(p, x.reshape(b * s, d), cfg).reshape(b, s, d)
+
+
+def _dispatch_compute(p: Params, xf: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Route + expert-FFN + combine for a flat (T, D) token block."""
+    m = cfg.moe
+    t, d = xf.shape
+    k = m.top_k
+    e = m.n_experts
+    cap = moe_capacity(cfg, t)
+
+    # --- routing (fp32) ------------------------------------------------------
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch --------------------------------------------------
+    flat_e = top_e.reshape(t * k).astype(jnp.int32)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(t * k)
+
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sw = flat_w[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32),
+                                   side="left").astype(jnp.int32)
+    rank = jnp.arange(t * k, dtype=jnp.int32) - group_start[se]
+    keep = rank < cap
+
+    didx = jnp.where(keep, se, e)                           # OOB -> dropped
+    ridx = jnp.clip(rank, 0, cap - 1)
+    xe = jnp.zeros((e, cap, d), xf.dtype)
+    xe = xe.at[didx, ridx].set(xf[stok], mode="drop")
+
+    # --- expert FFN (EP einsum; E shards over 'model') -------------------------
+    dt = xf.dtype
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+
+    # --- combine ---------------------------------------------------------------
+    contrib = ye[jnp.clip(se, 0, e - 1), ridx] * \
+        jnp.where(keep, sw, 0.0).astype(dt)[:, None]
+    yf = jnp.zeros((t, d), dt).at[stok].add(contrib)
+
+    if m.n_shared:
+        yf = yf + mlp(p["shared"], xf)
+    return yf
+
+
+def aux_load_balance_loss(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (fraction · probability)."""
+    m = cfg.moe
+    t = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1).reshape(t, m.n_experts)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, m.n_experts, dtype=jnp.float32), 0)
+    imp = jnp.mean(probs, 0)
+    return m.n_experts * jnp.sum(frac * imp)

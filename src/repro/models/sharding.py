@@ -1,0 +1,210 @@
+"""Sharding rules: parameter / optimizer-state / activation PartitionSpecs.
+
+Conventions (meshes built by launch/mesh.py):
+  * batch axes of activations shard over the data axes
+    (("pod","data") multi-pod, ("data",) single-pod);
+  * tensor-parallel dims shard over "model": attention heads, FFN hidden,
+    MoE experts (EP), SSM d_inner, vocab (embedding + logits);
+  * dims not divisible by the model-axis size stay replicated (e.g. KV
+    heads = 8 on a 16-way model axis — XLA would pad; replication is the
+    deliberate, Llama-TP-style choice);
+  * optimizer moments inherit the param spec; with ``cfg.zero1`` the
+    largest replicated dim additionally shards over "data" (ZeRO-1).
+
+Specs are derived *structurally* from parameter names + shapes, so any
+pytree produced by the model inits gets consistent rules without
+per-arch tables.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# Rules keyed by parameter leaf name: map dim index -> axis, guarded by
+# divisibility.  `None` entries mean replicated.
+_NAME_RULES = {
+    # embeddings / unembeddings: vocab on model
+    "table": (0, "model"),
+    # attention
+    "wq": (1, "model"), "wk": (1, "model"), "wv": (1, "model"),
+    "wo": (0, "model"),
+    "bq": (0, "model"), "bk": (0, "model"), "bv": (0, "model"),
+    # dense MLPs (SwiGLU + GELU)
+    "w_gate": (-1, "model"), "w_up": (-1, "model"), "w_down": (-2, "model"),
+    "w_in": (-1, "model"), "b_in": (-1, "model"), "w_out": (-2, "model"),
+    # MoE: expert dim on model (EP).  (w_gate/w_up/w_down of experts are
+    # 3D — handled by ndim check below.)
+    "router": None,
+    # SSM streams: d_inner on model; B/C/dt tiny -> replicated
+    "in_z": (-1, "model"), "in_x": (-1, "model"),
+    "in_b": None, "in_c": None, "in_dt": None,
+    "conv_x": (-1, "model"), "conv_bias_x": (-1, "model"),
+    "conv_b": None, "conv_c": None, "conv_bias_b": None, "conv_bias_c": None,
+    "a_log": (-1, "model"), "dt_bias": (-1, "model"), "d_skip": (-1, "model"),
+    "norm_scale": (-1, "model"),
+    "out_proj": (0, "model"),
+    # norms / misc
+    "scale": None, "bias": None, "b_out": None,
+}
+
+
+def _spec_for(path: str, leaf, msize: int) -> P:
+    name = path.split("/")[-1]
+    shape = leaf.shape
+    rule = _NAME_RULES.get(name, None)
+
+    # MoE expert tensors: (..., E, D, F) with a leading stacked-group axis
+    # possibly present.  Identify by 3+ dims for w_gate/w_up/w_down inside
+    # an "mlp" that has a router sibling — structurally: ndim >= 3 after
+    # stripping the group axis; shard the expert dim.
+    if name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3:
+        # dims: [groups?, E, D, F].  Expert dim is ndim-3.
+        edim = leaf.ndim - 3
+        if shape[edim] % msize == 0 and shape[edim] >= msize:
+            spec = [None] * leaf.ndim
+            spec[edim] = "model"
+            return P(*spec)
+        # fall through to hidden-dim rule
+
+    if rule is None:
+        return P()
+    dim, axis = rule
+    dim = dim % leaf.ndim if leaf.ndim else 0
+    # stacked group axis shifts positive dims by one; detect: rules were
+    # written for unstacked params.  Positive dims: if the leaf has an
+    # extra leading axis vs the rule's intent, shift.  We handle this by
+    # preferring the *negative* interpretation when divisibility fails.
+    candidates = [dim]
+    if rule[0] >= 0:
+        candidates.append(rule[0] + 1 if rule[0] + 1 < leaf.ndim else dim)
+    for dcand in candidates:
+        if shape[dcand] % msize == 0 and shape[dcand] >= msize:
+            spec = [None] * leaf.ndim
+            spec[dcand] = axis
+            return P(*spec)
+    return P()
+
+
+def param_specs(params: Params, mesh: Mesh) -> Params:
+    msize = _model_size(mesh)
+
+    def walk(path, leaf):
+        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        return _spec_for(key, leaf, msize)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def opt_state_specs(pspecs: Params, params: Params, mesh: Mesh,
+                    zero1: bool) -> Params:
+    """Moments inherit the param spec; ZeRO-1 additionally shards the
+    largest replicated dim over the data axes when divisible."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def widen(spec: P, leaf):
+        if not zero1 or leaf.ndim == 0:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # find largest dim currently replicated & divisible by data size
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if entries[i] is None and leaf.shape[i] % dsize == 0 \
+                    and leaf.shape[i] >= dsize:
+                entries[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(widen, pspecs, params)
+
+
+def _dsize(mesh: Mesh) -> int:
+    daxes = data_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+
+def batch_specs(batch_tree: Params, mesh: Mesh) -> Params:
+    """Shard the leading (batch) dim of every input over the data axes
+    (replicate when the batch doesn't divide — e.g. global_batch=1)."""
+    daxes = data_axes(mesh)
+    ax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsz = _dsize(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsz or leaf.shape[0] < dsz:
+            return P(*([None] * leaf.ndim))
+        return P(ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree: Params, mesh: Mesh) -> Params:
+    """KV caches / SSM states: batch dim over data; KV-head or d_inner dim
+    over model when divisible.  Layout (groups?, B, S, KV, hd) or SSM
+    {h: (groups?, B, H, N, P), conv_*: (groups?, B, K-1, C)}."""
+    daxes = data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    msize = _model_size(mesh)
+
+    dsz = _dsize(mesh)
+
+    def walk(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = leaf.ndim
+        spec = [None] * nd
+        # batch dim: first dim whose name isn't the stacked group axis —
+        # structurally: KV caches are 5D (G,B,S,KV,hd) or 4D (B,S,KV,hd);
+        # ssm h is 5D (G,B,H,N,P) or 4D; conv bufs 4D (G,B,K,C) or 3D.
+        bdim = 1 if nd >= 4 and name in ("k", "v", "h") else \
+            (1 if nd == 4 and name.startswith("conv") else 0)
+        if name in ("k", "v") and nd == 4:
+            bdim = 0
+        if name == "h" and nd == 4:
+            bdim = 0
+        if name.startswith("conv") and nd == 3:
+            bdim = 0
+        if name in ("cross_k", "cross_v"):
+            bdim = 1
+        batch_ok = leaf.shape[bdim] % dsz == 0 and leaf.shape[bdim] >= dsz
+        if batch_ok:
+            spec[bdim] = dax
+        # model axis: KV heads (dim -2 of k/v) or SSM heads (dim bdim+1 of h)
+        if name in ("k", "v", "cross_k", "cross_v") and leaf.shape[-2] % msize == 0 \
+                and leaf.shape[-2] >= msize:
+            spec[nd - 2] = "model"
+        if name == "h" and leaf.shape[bdim + 1] % msize == 0 \
+                and leaf.shape[bdim + 1] >= msize:
+            spec[bdim + 1] = "model"
+        if name == "conv_x" and leaf.shape[-1] % msize == 0 \
+                and leaf.shape[-1] >= msize:
+            spec[nd - 1] = "model"
+        # long-context, batch-1 decode: sequence-parallel KV — shard the
+        # cache length over the data axes instead of the batch
+        if not batch_ok and name in ("k", "v") and nd >= 3:
+            sdim = bdim + 1
+            if leaf.shape[sdim] % dsz == 0 and leaf.shape[sdim] >= dsz:
+                spec[sdim] = dax
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+def to_shardings(spec_tree: Params, mesh: Mesh) -> Params:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,212 @@
+"""Mamba2 (SSD — state-space duality) mixer block.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+the selective state-space recurrence
+
+    h_t = a_t · h_t-1 + dt_t · B_t ⊗ x_t          (per head, a_t = exp(dt·A))
+    y_t = C_t · h_t + D · x_t
+
+is evaluated as (i) an intra-chunk *quadratic attention-like* form — all
+MXU matmuls over (Q, Q) chunk tiles, which is the whole point of SSD on
+TPU — plus (ii) an inter-chunk state scan of the (H, N, P) chunk states
+(``lax.scan``, O(S/Q) sequential steps).
+
+Projections are split per stream (z, x, B, C, dt) instead of one fused
+in_proj: mathematically identical, but it lets the d_inner streams shard
+cleanly on the mesh's ``model`` axis (heads × headdim live in d_inner)
+while the tiny B/C/dt streams stay replicated — slicing a fused
+projection across a sharded axis would force XLA reshards every layer.
+
+The decode path is the O(1)-per-token recurrence over a persistent
+(B, H, N, P) state plus a (K-1)-deep depthwise-conv ring buffer — this is
+what makes the 500k-token cell feasible (state size is independent of
+context length), per DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import _init, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, d_state)."""
+    di = cfg.ssm_expand * cfg.d_model
+    pd = cfg.ssm_headdim
+    assert di % pd == 0
+    return di, di // pd, pd, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di, h, pdim, n = ssm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "in_z": _init(ks[0], (d, di), s, dtype),
+        "in_x": _init(ks[1], (d, di), s, dtype),
+        "in_b": _init(ks[2], (d, n), s, dtype),
+        "in_c": _init(ks[3], (d, n), s, dtype),
+        "in_dt": _init(ks[4], (d, h), s, dtype),
+        "conv_x": _init(ks[5], (cfg.ssm_conv, di), 0.5, dtype),
+        "conv_b": _init(ks[6], (cfg.ssm_conv, n), 0.5, dtype),
+        "conv_c": _init(ks[7], (cfg.ssm_conv, n), 0.5, dtype),
+        "conv_bias_x": jnp.zeros((di,), dtype),
+        "conv_bias_b": jnp.zeros((n,), dtype),
+        "conv_bias_c": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[8], (di, d), 1.0 / np.sqrt(di), dtype),
+    }
+
+
+def _causal_conv(w, bias, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv (kernel K) via K shifted adds; x (B, S, C)."""
+    k = w.shape[0]
+    out = x * w[k - 1].astype(x.dtype)
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[k - 1 - i].astype(x.dtype)
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def _streams(p: Params, x: jax.Array, cfg: ArchConfig):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(dt_))
+    xi = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(dt_))
+    bm = jnp.einsum("bsd,dn->bsn", x, p["in_b"].astype(dt_))
+    cm = jnp.einsum("bsd,dn->bsn", x, p["in_c"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(dt_))
+    return z, xi, bm, cm, dt
+
+
+def ssd_forward(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence SSD (train / prefill).  x (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, h, pdim, n = ssm_dims(cfg)
+    q = cfg.ssm_chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z, xi, bm, cm, dt = _streams(p, x, cfg)
+    xi = _causal_conv(p["conv_x"], p["conv_bias_x"], xi)
+    bm = _causal_conv(p["conv_b"], p["conv_bias_b"], bm)
+    cm = _causal_conv(p["conv_c"], p["conv_bias_c"], cm)
+    xs = xi.reshape(b, s, h, pdim)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    log_decay = dtv * a[None, None, :]                             # (B,S,H) ≤ 0
+
+    # chunk views
+    xs_c = xs.reshape(b, nc, q, h, pdim)
+    b_c = bm.reshape(b, nc, q, n)
+    c_c = cm.reshape(b, nc, q, n)
+    ld_c = log_decay.reshape(b, nc, q, h)
+    dt_c = dtv.reshape(b, nc, q, h)
+
+    cum = jnp.cumsum(ld_c, axis=2)                   # (B,nc,Q,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :]
+    lj = cum[:, :, None, :, :]
+    lmask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    lmat = jnp.exp(jnp.where(lmask[None, None, ..., None], li - lj, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij",
+                        c_c.astype(jnp.float32), b_c.astype(jnp.float32))
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]               # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         scores[..., None] * lmat, xdt)
+
+    # chunk states: S_c = Σ_j exp(cum_last - cum_j) B_j ⊗ xdt_j  -> (B,nc,H,N,P)
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                         b_c.astype(jnp.float32), tail_decay, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        s_c, cd = inp                                # (B,H,N,P), (B,H)
+        hnew = hprev * cd[..., None, None] + s_c
+        return hnew, hprev                           # emit state BEFORE chunk
+
+    h0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                  # (B,nc,H,N,P)
+
+    in_decay = jnp.exp(cum)                          # decay chunk-start -> i
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         c_c.astype(jnp.float32), h_in, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    # gated RMSNorm + out proj
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) per token)
+# ---------------------------------------------------------------------------
+
+def ssm_decode_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, h, pdim, n = ssm_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, n, pdim), dtype),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, cfg.ssm_conv - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, cfg.ssm_conv - 1, n), dtype),
+    }
+
+
+def _conv_step(w, bias, buf, cur, dtype):
+    """One causal-conv step over ring buffer; returns (out, new_buf)."""
+    window = jnp.concatenate([buf, cur[:, None].astype(buf.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window.astype(dtype), w.astype(dtype))
+    return jax.nn.silu(out + bias.astype(dtype)), window[:, 1:]
+
+
+def ssd_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
+               cfg: ArchConfig):
+    """x (B, 1, D); returns (y (B,1,D), new_state)."""
+    b = x.shape[0]
+    di, h, pdim, n = ssm_dims(cfg)
+    z, xi, bm, cm, dt = _streams(p, x, cfg)
+
+    xo, ncx = _conv_step(p["conv_x"], p["conv_bias_x"], state["conv_x"],
+                         xi[:, 0], x.dtype)
+    bo, ncb = _conv_step(p["conv_b"], p["conv_bias_b"], state["conv_b"],
+                         bm[:, 0], x.dtype)
+    co, ncc = _conv_step(p["conv_c"], p["conv_bias_c"], state["conv_c"],
+                         cm[:, 0], x.dtype)
+
+    xs = xo.reshape(b, h, pdim).astype(jnp.float32)
+    bv = bo.astype(jnp.float32)
+    cv = co.astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dtv * (-jnp.exp(p["a_log"]))[None, :])                  # (B,H)
+
+    hst = state["h"].astype(jnp.float32)
+    hst = hst * a[..., None, None] + \
+        jnp.einsum("bn,bhp->bhnp", bv, xs * dtv[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", cv, hst) + xs * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return y, {"h": hst.astype(state["h"].dtype), "conv_x": ncx,
+               "conv_b": ncb, "conv_c": ncc}

@@ -1,0 +1,263 @@
+"""Decoder-only transformer stack (covers dense, MoE, hybrid and SSM
+families, plus the LLaVA text backbone with stubbed patch embeddings).
+
+The layer stack is a ``lax.scan`` over *groups* (one group = one period of
+``cfg.group_pattern``); every group's parameters carry a leading
+(n_groups,) axis.  One group body is compiled regardless of depth — the
+72-layer Jamba lowers the same HLO size as a 8-layer toy — and XLA's
+latency-hiding scheduler can overlap the per-group collectives with
+compute across scan iterations.
+
+Decode state: per group-position either an attention KV cache
+(n_groups, B, S_max, KV, hd) or an SSM state {h, conv} with leading
+(n_groups,) — also scanned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (embed, init_embed, init_mlp, init_rmsnorm,
+                                 mlp, rmsnorm, unembed)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, spec, cfg: ArchConfig, pdt) -> Params:
+    mixer_kind, mlp_kind = spec
+    k1, k2 = jax.random.split(key)
+    p: Params = {"mixer_norm": init_rmsnorm(cfg.d_model, pdt),
+                 "mlp_norm": init_rmsnorm(cfg.d_model, pdt)}
+    if mixer_kind in ("attn", "attn_local"):
+        p["mixer"] = attn.init_attention(k1, cfg, pdt)
+    elif mixer_kind == "mamba":
+        p["mixer"] = ssm_mod.init_ssm(k1, cfg, pdt)
+    elif mixer_kind != "none":
+        raise ValueError(mixer_kind)
+    if mlp_kind == "dense":
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, pdt)
+    elif mlp_kind == "moe":
+        p["mlp"] = moe_mod.init_moe(k2, cfg, pdt)
+    elif mlp_kind == "none":      # pure-mixer block (mamba2)
+        del p["mlp_norm"]
+    else:
+        raise ValueError(mlp_kind)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    pdt = _pdtype(cfg)
+    keys = jax.random.split(key, 4 + len(cfg.group_pattern))
+    params: Params = {"embed": init_embed(keys[0], cfg.vocab, cfg.d_model, pdt),
+                      "final_norm": init_rmsnorm(cfg.d_model, pdt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embed(keys[1], cfg.vocab, cfg.d_model, pdt)
+    if cfg.first_layer_override:
+        params["first"] = _init_block(keys[2], cfg.first_layer_override, cfg, pdt)
+
+    # stacked group params: vmap init over group index
+    def init_group(k):
+        ks = jax.random.split(k, len(cfg.group_pattern))
+        return {f"pos_{i}": _init_block(ks[i], spec, cfg, pdt)
+                for i, spec in enumerate(cfg.group_pattern)}
+
+    gkeys = jax.random.split(keys[3], cfg.n_groups)
+    params["groups"] = jax.vmap(init_group)(gkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp: Params, spec, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    mixer_kind, mlp_kind = spec
+    if mixer_kind != "none":
+        h = rmsnorm(bp["mixer_norm"], x, cfg.norm_eps)
+        if mixer_kind == "attn":
+            x = x + attn.attention(bp["mixer"], h, cfg, local=False)
+        elif mixer_kind == "attn_local":
+            x = x + attn.attention(bp["mixer"], h, cfg, local=True)
+        else:
+            x = x + ssm_mod.ssd_forward(bp["mixer"], h, cfg)
+    if mlp_kind != "none":
+        h = rmsnorm(bp["mlp_norm"], x, cfg.norm_eps)
+        if mlp_kind == "dense":
+            x = x + mlp(bp["mlp"], h)
+        else:
+            x = x + moe_mod.moe_layer(bp["mlp"], h, cfg)
+    return x
+
+
+def forward_hidden(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Embedded input (B, S, D) -> final hidden states (B, S, D)."""
+
+    if cfg.first_layer_override:
+        x = _apply_block(params["first"], cfg.first_layer_override, x, cfg)
+
+    def group_body(xc, gp):
+        for i, spec in enumerate(cfg.group_pattern):
+            xc = _apply_block(gp[f"pos_{i}"], spec, xc, cfg)
+        return xc, ()
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            patches: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B, S[, + patches (B, P, D)]) -> logits (B, S_total, V) bf16."""
+    dt = _dtype(cfg)
+    x = embed(params["embed"], tokens, dt)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(dt), x], axis=1)
+    x = forward_hidden(params, x, cfg)
+    head = params.get("lm_head", params["embed"])
+    return jnp.einsum("bsd,vd->bsv", x, head["table"].astype(dt))
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig) -> jax.Array:
+    """Next-token cross-entropy; labels < 0 are masked out."""
+    logits = forward(params, batch["tokens"], cfg, batch.get("patches"))
+    n_patch = 0 if batch.get("patches") is None else batch["patches"].shape[1]
+    logits = logits[:, n_patch:]
+    labels = batch["labels"]
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = labels[:, 1:]
+    mask = (tg >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, jnp.maximum(tg, 0)[..., None],
+                                 axis=-1)[..., 0]
+    nll = (lse - picked) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, static caches)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, s_max: int) -> Params:
+    """Per-group-position stacked caches."""
+    dt = _dtype(cfg)
+    caches: Params = {}
+    for i, (mixer_kind, _) in enumerate(cfg.group_pattern):
+        if mixer_kind in ("attn", "attn_local"):
+            # local layers only ever read the last `sliding_window` positions,
+            # so their cache is bounded by the window, not the context
+            s_cache = s_max if mixer_kind == "attn" else \
+                min(s_max, int(2 ** np.ceil(np.log2(max(cfg.sliding_window, 2)))))
+            caches[f"pos_{i}"] = {
+                "k": jnp.zeros((cfg.n_groups, batch, s_cache, cfg.n_kv, cfg.hd), dt),
+                "v": jnp.zeros((cfg.n_groups, batch, s_cache, cfg.n_kv, cfg.hd), dt),
+            }
+        elif mixer_kind == "mamba":
+            st = ssm_mod.ssm_decode_state(cfg, batch)
+            caches[f"pos_{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), st)
+    if cfg.first_layer_override:
+        mixer_kind, _ = cfg.first_layer_override
+        if mixer_kind in ("attn", "attn_local"):
+            caches["first"] = {
+                "k": jnp.zeros((batch, s_max, cfg.n_kv, cfg.hd), dt),
+                "v": jnp.zeros((batch, s_max, cfg.n_kv, cfg.hd), dt),
+            }
+        elif mixer_kind == "mamba":
+            caches["first"] = ssm_mod.ssm_decode_state(cfg, batch)
+    return caches
+
+
+def _decode_block(bp: Params, cache, spec, x, pos, cfg: ArchConfig):
+    mixer_kind, mlp_kind = spec
+    new_cache = cache
+    if mixer_kind != "none":
+        h = rmsnorm(bp["mixer_norm"], x, cfg.norm_eps)
+        if mixer_kind in ("attn", "attn_local"):
+            s_cache = cache["k"].shape[1]
+            # local layers write round-robin into their window-sized ring
+            wpos = pos % s_cache if mixer_kind == "attn_local" else pos
+            o, kc, vc = attn.attention_decode(
+                bp["mixer"], h, cache["k"], cache["v"], pos, cfg,
+                write_pos=wpos)
+            x = x + o
+            new_cache = {"k": kc, "v": vc}
+        else:
+            o, new_cache = ssm_mod.ssd_decode(bp["mixer"], h, cache, cfg)
+            x = x + o
+    if mlp_kind != "none":
+        h = rmsnorm(bp["mlp_norm"], x, cfg.norm_eps)
+        if mlp_kind == "dense":
+            x = x + mlp(bp["mlp"], h)
+        else:
+            x = x + moe_mod.moe_layer(bp["mlp"], h, cfg)
+    return x, new_cache
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig):
+    """tokens (B, 1) at absolute position pos -> (logits (B,1,V), caches)."""
+    dt = _dtype(cfg)
+    x = embed(params["embed"], tokens, dt)
+
+    if cfg.first_layer_override:
+        x, new_first = _decode_block(params["first"], caches.get("first"),
+                                     cfg.first_layer_override, x, pos, cfg)
+    else:
+        new_first = None
+
+    def group_body(xc, scanned):
+        gp, gcache = scanned
+        new_caches = {}
+        for i, spec in enumerate(cfg.group_pattern):
+            xc, nc = _decode_block(gp[f"pos_{i}"], gcache.get(f"pos_{i}"),
+                                   spec, xc, pos, cfg)
+            if nc is not None:
+                new_caches[f"pos_{i}"] = nc
+        return xc, new_caches
+
+    group_caches = {k: v for k, v in caches.items() if k != "first"}
+    x, new_group_caches = jax.lax.scan(group_body, x,
+                                       (params["groups"], group_caches),
+                                       unroll=cfg.scan_unroll)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head["table"].astype(dt))
+
+    out_caches = dict(new_group_caches)
+    if new_first is not None:
+        out_caches["first"] = new_first
+    return logits, out_caches
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            patches: Optional[jax.Array] = None) -> jax.Array:
+    """Prefill = forward pass returning last-position logits (the cache-
+    populating variant is exercised via decode_step; for the roofline the
+    compute shape is what matters)."""
+    logits = forward(params, tokens, cfg, patches)
+    return logits[:, -1:]

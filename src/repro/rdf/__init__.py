@@ -1,0 +1,16 @@
+"""RDF data substrate: dictionary encoding, N-Triples IO, WatDiv-like generator."""
+
+from repro.rdf.dictionary import Dictionary, encode_graph, PAD, UNBOUND
+from repro.rdf.generator import WatDivConfig, generate_watdiv
+from repro.rdf.ntriples import parse_ntriples, write_ntriples
+
+__all__ = [
+    "Dictionary",
+    "encode_graph",
+    "PAD",
+    "UNBOUND",
+    "WatDivConfig",
+    "generate_watdiv",
+    "parse_ntriples",
+    "write_ntriples",
+]

@@ -1,0 +1,5 @@
+"""Serving runtime: the batched SPARQL query server (the paper's kind)."""
+
+from repro.serve.engine import ServerMetrics, SparqlServer
+
+__all__ = ["SparqlServer", "ServerMetrics"]

@@ -1,0 +1,90 @@
+"""AdamW optimizer (pure JAX — no external deps) with global-norm
+clipping, decoupled weight decay, linear-warmup cosine schedule, and
+optional bf16 gradient compression with error feedback (see
+compression.py).
+
+Optimizer state is a pytree congruent with the parameters; its sharding
+is derived from the parameter sharding in models/sharding.py (with
+ZeRO-1-style extra sharding over the data axis when ``cfg.zero1``)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    mu: Params               # first moment (fp32)
+    nu: Params               # second moment (fp32)
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_opt_state(params: Params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: OptConfig, grads: Params, state: AdamWState,
+                 params: Params) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,38 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benches must see the real single CPU device; multi-device tests
+spawn subprocesses with their own XLA_FLAGS."""
+
+import numpy as np
+import pytest
+
+from repro.rdf.dictionary import Dictionary
+from repro.rdf.generator import WatDivConfig, generate_watdiv
+from repro.core.stats import build_catalog
+
+
+@pytest.fixture(scope="session")
+def g1():
+    """The paper's running example graph G1 (Fig. 1)."""
+    triples = [
+        ("A", "follows", "B"), ("B", "follows", "C"), ("B", "follows", "D"),
+        ("C", "follows", "D"), ("A", "likes", "I1"), ("A", "likes", "I2"),
+        ("C", "likes", "I2"),
+    ]
+    d = Dictionary()
+    tt = d.encode_triples(triples)
+    cat = build_catalog(tt, d)
+    return cat, d
+
+
+@pytest.fixture(scope="session")
+def watdiv_small():
+    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=0.1, seed=7))
+    cat = build_catalog(tt, d)
+    return cat, d, sch
+
+
+@pytest.fixture(scope="session")
+def watdiv_medium():
+    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=0.5, seed=3))
+    cat = build_catalog(tt, d)
+    return cat, d, sch

@@ -1,0 +1,121 @@
+"""ExtVP schema construction vs the set-comprehension definitions of §5.2,
+plus the paper's G1 worked example (Figs. 1, 8, 10)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import build_catalog
+from repro.core.table import Table
+from repro.core.vp import KINDS, OS, SO, SS, build_extvp, build_vp
+from repro.rdf.dictionary import Dictionary
+
+
+def brute_extvp(vp, kind, p1, p2):
+    """§5.2 definitions, literally."""
+    t1, t2 = vp[p1].rows, vp[p2].rows
+    if kind == SS:
+        keys = set(t2[:, 0].tolist())
+        keep = [r for r in t1.tolist() if r[0] in keys]
+    elif kind == OS:
+        keys = set(t2[:, 0].tolist())
+        keep = [r for r in t1.tolist() if r[1] in keys]
+    else:
+        keys = set(t2[:, 1].tolist())
+        keep = [r for r in t1.tolist() if r[0] in keys]
+    return sorted(map(tuple, keep))
+
+
+class TestG1:
+    """Paper Fig. 10: the full ExtVP data model for G1."""
+
+    def test_fig10_sf_values(self, g1):
+        cat, d = g1
+        f, l = d.id_of("follows"), d.id_of("likes")
+        assert cat.sf(OS, f, l) == 0.25        # ExtVP^OS_follows|likes
+        assert cat.sf(OS, f, f) == 0.5         # follows o ∈ follows s: B,C
+        assert cat.sf(SS, f, l) == 0.5
+        assert cat.sf(SO, f, f) == 0.75
+        assert cat.sf(SO, f, l) == pytest.approx(0.0)   # likes objects are items
+        assert cat.sf(OS, l, f) == pytest.approx(0.0)   # item never follows
+        assert cat.sf(SS, l, f) == 1.0         # identity -> not materialized
+        assert (SS, l, f) not in cat.extvp.tables
+
+    def test_fig8_semijoin_content(self, g1):
+        cat, d = g1
+        f, l = d.id_of("follows"), d.id_of("likes")
+        t = cat.table(OS, f, l)
+        rows = [tuple(d.term_of(int(x)) for x in r) for r in t.rows]
+        assert rows == [("B", "C")]   # only B->C has o that likes something
+
+    def test_identity_and_empty_not_materialized(self, g1):
+        cat, _ = g1
+        for key, sf in cat.extvp.sf.items():
+            if sf in (0.0, 1.0):
+                assert key not in cat.extvp.tables
+            else:
+                assert key in cat.extvp.tables
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_extvp_matches_definitions(data):
+    """Property: ExtVP == §5.2 set comprehension on random small graphs."""
+    rng_seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(rng_seed)
+    n_preds = data.draw(st.integers(1, 4))
+    n_terms = data.draw(st.integers(2, 12))
+    n_triples = data.draw(st.integers(0, 60))
+    tt = np.stack([
+        rng.integers(0, n_terms, n_triples),
+        n_terms + rng.integers(0, n_preds, n_triples),
+        rng.integers(0, n_terms, n_triples),
+    ], axis=1).astype(np.int32)
+    tt = np.unique(tt, axis=0)
+    vp = build_vp(tt)
+    ext = build_extvp(vp)
+    for p1 in vp:
+        for p2 in vp:
+            for kind in KINDS:
+                if kind == SS and p1 == p2:
+                    continue
+                expected = brute_extvp(vp, kind, p1, p2)
+                sf = ext.sf[(kind, p1, p2)]
+                assert sf == len(expected) / max(len(vp[p1]), 1)
+                if 0 < sf < 1:
+                    got = sorted(map(tuple, ext.tables[(kind, p1, p2)].rows.tolist()))
+                    assert got == expected
+                elif sf == 1.0:
+                    assert sorted(map(tuple, vp[p1].rows.tolist())) == expected
+
+
+def test_threshold_materialization():
+    """§5.3: τ controls materialization but never statistics."""
+    d = Dictionary()
+    triples = [("a", "p", "b"), ("b", "p", "c"), ("c", "p", "d"), ("d", "p", "e"),
+               ("b", "q", "x")]
+    tt = d.encode_triples(triples)
+    vp = build_vp(tt)
+    full = build_extvp(vp, threshold=1.0)
+    thr = build_extvp(vp, threshold=0.2)
+    assert full.sf == thr.sf                       # stats identical
+    assert set(thr.tables) <= set(full.tables)     # strictly fewer tables
+    for key, t in thr.tables.items():
+        assert thr.sf[key] <= 0.2
+
+
+def test_vp_partitions_cover_tt(watdiv_small):
+    cat, d, sch = watdiv_small
+    assert sum(len(t) for t in cat.vp.values()) == len(cat.tt)
+    # every VP table sorted by s
+    for t in cat.vp.values():
+        s = t.rows[:, 0]
+        assert np.all(s[:-1] <= s[1:])
+
+
+def test_storage_report_structure(watdiv_small):
+    cat, _, _ = watdiv_small
+    rep = cat.storage_report()
+    assert rep["vp_tuples"] == rep["n_triples"]
+    assert rep["extvp_tables"] > 0
+    assert rep["extvp_empty"] > 0        # heterogeneous schema -> many empties

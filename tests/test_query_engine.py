@@ -1,0 +1,212 @@
+"""Parser, compiler (Algorithms 1/4) and eager executor vs the brute-force
+oracle — including hypothesis property tests over random graphs + BGPs."""
+
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algebra import BGP, TriplePattern
+from repro.core.compiler import compile_bgp, select_table
+from repro.core.executor import execute
+from repro.core.reference import execute_reference, mappings_to_multiset
+from repro.core.sparql import parse_sparql
+from repro.core.stats import build_catalog
+from repro.rdf.dictionary import Dictionary
+
+
+def run_both(qtext, cat, d):
+    q = parse_sparql(qtext, d)
+    got = execute(q, cat)
+    ref = execute_reference(q, cat.tt, d.values)
+    assert mappings_to_multiset(ref, got.cols) == got.as_multiset(), qtext
+    return got
+
+
+class TestPaperExample:
+    def test_q1_result(self, g1):
+        cat, d = g1
+        got = run_both(
+            "SELECT * WHERE { ?x likes ?w . ?x follows ?y . "
+            "?y follows ?z . ?z likes ?w }", cat, d)
+        assert len(got) == 1
+        row = {c: d.term_of(int(v)) for c, v in zip(got.cols, got.data[0])}
+        assert row == {"?x": "A", "?y": "B", "?z": "C", "?w": "I2"}
+
+    def test_q1_table_selection(self, g1):
+        """Fig. 11: tp3 = (?y follows ?z) must select ExtVP^OS_{follows|likes}."""
+        cat, d = g1
+        f, l = d.id_of("follows"), d.id_of("likes")
+        tps = [
+            TriplePattern("?x", l, "?w"), TriplePattern("?x", f, "?y"),
+            TriplePattern("?y", f, "?z"), TriplePattern("?z", l, "?w"),
+        ]
+        step = select_table(tps[2], tps, build_catalog(cat.tt, d))
+        assert (step.kind, step.p2) == ("OS", l)
+        assert step.sf == 0.25
+
+    def test_join_order_smallest_first(self, g1):
+        """Fig. 12: the two smallest tables (tp3, tp4) join first."""
+        cat, d = g1
+        q = parse_sparql(
+            "SELECT * WHERE { ?x likes ?w . ?x follows ?y . "
+            "?y follows ?z . ?z likes ?w }", d)
+        plan = compile_bgp(q.root, cat)
+        sizes = [s.size for s in plan.steps]
+        assert sizes[0] == min(sizes)
+
+
+class TestStatisticsShortCircuit:
+    def test_empty_correlation(self, watdiv_small):
+        """ST-8 behaviour: provably-empty queries never touch data."""
+        cat, d, sch = watdiv_small
+        q = parse_sparql(
+            "SELECT * WHERE { ?p sorg:price ?x . ?x wsdbm:follows ?y }", d)
+        plan = compile_bgp(q.root, cat)
+        assert plan.empty
+        assert len(execute(q, cat)) == 0
+
+    def test_missing_term(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        q = parse_sparql(
+            "SELECT * WHERE { ?s wsdbm:doesNotExist ?o }", d)
+        assert compile_bgp(q.root, cat).empty
+
+    def test_large_intermediate_skipped(self, watdiv_small):
+        """ST-8-2: big intermediates never materialize when stats say empty."""
+        cat, d, _ = watdiv_small
+        q = parse_sparql(
+            "SELECT * WHERE { ?a wsdbm:friendOf ?b . ?b wsdbm:follows ?c . "
+            "?c sorg:hasGenre ?g }", d)
+        plan = compile_bgp(q.root, cat)
+        assert plan.empty  # users never subjects of hasGenre
+
+
+class TestOperators:
+    def test_filter_numeric(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        run_both("SELECT * WHERE { ?u foaf:age ?a . FILTER(?a > 50) }", cat, d)
+        run_both("SELECT * WHERE { ?p sorg:price ?x . FILTER(?x >= 900 && ?x < 950) }",
+                 cat, d)
+
+    def test_filter_identity(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        run_both('SELECT * WHERE { ?u wsdbm:gender ?g . FILTER(?g = "str1") }', cat, d)
+        run_both('SELECT * WHERE { ?u wsdbm:gender ?g . FILTER(?g != "str1") }', cat, d)
+
+    def test_optional(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        got = run_both(
+            "SELECT * WHERE { ?u wsdbm:likes ?p OPTIONAL { ?u foaf:age ?a } }",
+            cat, d)
+        assert (got.col("?a") == -1).any()   # some users have no age
+
+    def test_union(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        run_both(
+            "SELECT * WHERE { { ?u wsdbm:purchased ?p } UNION { ?u wsdbm:likes ?p } }",
+            cat, d)
+
+    def test_distinct_orderby_limit(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        got = run_both(
+            "SELECT DISTINCT ?a WHERE { ?u foaf:age ?a } ORDER BY ?a LIMIT 5",
+            cat, d)
+        assert len(got) <= 5
+        vals = d.values[got.data[:, 0]]
+        assert np.all(np.diff(vals) >= 0)
+
+    def test_bound_object(self, watdiv_small):
+        cat, d, sch = watdiv_small
+        run_both("SELECT * WHERE { ?u wsdbm:likes wsdbm:Product1 . "
+                 "?u sorg:email ?e }", cat, d)
+
+    def test_unbound_predicate_uses_tt(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        got = run_both("SELECT * WHERE { wsdbm:Retailer1 ?p ?o }", cat, d)
+        assert len(got) > 0
+
+    def test_projection_select(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        got = run_both("SELECT ?u WHERE { ?u wsdbm:likes ?p . ?p sorg:price ?x }",
+                       cat, d)
+        assert got.cols == ("?u",)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random graphs × random BGPs vs brute force
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_graph_and_bgp(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    n_terms = draw(st.integers(3, 10))
+    n_preds = draw(st.integers(1, 4))
+    n_triples = draw(st.integers(1, 50))
+    tt = np.stack([
+        rng.integers(0, n_terms, n_triples),
+        n_terms + rng.integers(0, n_preds, n_triples),
+        rng.integers(0, n_terms, n_triples),
+    ], axis=1).astype(np.int32)
+    tt = np.unique(tt, axis=0)
+
+    n_patterns = draw(st.integers(1, 4))
+    var_pool = ["?a", "?b", "?c", "?d", "?e"]
+
+    def term(position):
+        choice = draw(st.integers(0, 9))
+        if choice < 6:
+            return var_pool[draw(st.integers(0, len(var_pool) - 1))]
+        if position == 1:
+            return int(n_terms + draw(st.integers(0, n_preds - 1)))
+        return int(draw(st.integers(0, n_terms - 1)))
+
+    patterns = []
+    for _ in range(n_patterns):
+        s, o = term(0), term(2)
+        # predicate: mostly bound (the realistic case the engine optimizes)
+        p = term(1) if draw(st.integers(0, 4)) == 0 else \
+            int(n_terms + draw(st.integers(0, n_preds - 1)))
+        patterns.append(TriplePattern(s, p, o))
+    return tt, patterns
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_graph_and_bgp())
+def test_bgp_engine_matches_oracle(case):
+    tt, patterns = case
+    from repro.core.algebra import Query
+    cat = build_catalog(tt)
+    q = Query(root=BGP(patterns), select=None, distinct=False)
+    got = execute(q, cat)
+    ref = execute_reference(q, tt)
+    assert mappings_to_multiset(ref, got.cols) == got.as_multiset(), \
+        (patterns, got.data, ref)
+
+
+class TestPtBaseline:
+    """Sempala-style property-table layout (paper §4.3 baseline)."""
+
+    def test_pt_agrees_with_extvp(self, watdiv_small):
+        cat, d, sch = watdiv_small
+        from repro.rdf.workloads import basic_queries
+        import collections
+        for name, insts in basic_queries(sch, seed=5, n_instances=1).items():
+            q = parse_sparql(insts[0], d)
+            a = execute(q, cat, layout="extvp")
+            b = execute(q, cat, layout="pt")
+            key = sorted(a.cols)
+            ma = collections.Counter(map(tuple, a.data[:, [a.cols.index(c) for c in key]].tolist()))
+            mb = collections.Counter(map(tuple, b.data[:, [b.cols.index(c) for c in key]].tolist()))
+            assert ma == mb, name
+
+    def test_pt_star_group_decomposition(self, watdiv_small):
+        cat, d, _ = watdiv_small
+        from repro.core.algebra import BGP
+        from repro.core.pt import _star_groups
+        q = parse_sparql(
+            "SELECT * WHERE { ?u sorg:email ?e . ?u foaf:age ?a . "
+            "?u wsdbm:likes ?p . ?p sorg:price ?x }", d)
+        groups = _star_groups(q.root.patterns)
+        assert sorted(len(g) for g in groups) == [1, 3]

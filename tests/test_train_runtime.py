@@ -1,0 +1,174 @@
+"""Optimizer, checkpoint/restore (incl. elastic), compression, data
+determinism, elastic policy and straggler mitigation."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.api import Model
+from repro.models.config import ShapeCell
+from repro.train import checkpoint
+from repro.train.compression import compress_decompress, init_error_state
+from repro.train.data import DataConfig, make_batch
+from repro.train.elastic import ClusterView, ElasticPolicy, StragglerDetector
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.train.train_state import make_train_step
+
+CELL = ShapeCell("t", 32, 4, "train")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_loss_decreases(setup):
+    cfg, model, params = setup
+    opt = OptConfig(lr=3e-3, warmup_steps=2, total_steps=100)
+    step_fn = jax.jit(make_train_step(model, opt))
+    opt_state = init_opt_state(params)
+    dc = DataConfig(seed=1, vocab=64)   # low-entropy synthetic stream
+    losses = []
+    for step in range(40):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(dc, cfg, CELL, step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.75, (losses[0], losses[-1])
+
+
+def test_grad_accumulation_equivalence(setup):
+    cfg, model, params = setup
+    opt = OptConfig(lr=1e-3, clip_norm=1e9)   # no clipping: exact equality
+    s1 = make_train_step(model, opt, accum_steps=1)
+    s2 = make_train_step(model, opt, accum_steps=2)
+    dc = DataConfig(seed=2, vocab=cfg.vocab)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(dc, cfg, CELL, 0).items()}
+    o1 = init_opt_state(params)
+    o2 = init_opt_state(params)
+    p1, _, m1 = jax.jit(s1)(params, o1, batch)
+    p2, _, m2 = jax.jit(s2)(params, o2, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, model, params = setup
+    opt_state = init_opt_state(params)
+    tree = {"params": params, "opt": opt_state}
+    fut = checkpoint.save(str(tmp_path), 7, tree, extra={"note": "x"},
+                          async_write=True)
+    fut.result()
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    restored = checkpoint.restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path, setup):
+    """A .tmp directory (simulated crash) is never reported as a step."""
+    cfg, model, params = setup
+    checkpoint.save(str(tmp_path), 3, {"p": params}, async_write=False)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+
+
+def test_resume_determinism(tmp_path, setup):
+    """save at step k, keep training vs restore + train: identical."""
+    cfg, model, params = setup
+    opt = OptConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(model, opt))
+    dc = DataConfig(seed=3, vocab=cfg.vocab)
+    o = init_opt_state(params)
+    p = params
+    for step in range(3):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(dc, cfg, CELL, step).items()}
+        p, o, _ = step_fn(p, o, batch)
+        if step == 1:
+            checkpoint.save(str(tmp_path), 1, {"params": p, "opt": o},
+                            async_write=False)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        {"params": p, "opt": o})
+    restored = checkpoint.restore(str(tmp_path), 1, like)
+    p2, o2 = restored["params"], restored["opt"]
+    batch = {k: jnp.asarray(v) for k, v in make_batch(dc, cfg, CELL, 2).items()}
+    p2, o2, _ = step_fn(p2, o2, batch)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compression_error_feedback():
+    # 1 + 2^-12 is invisible to bf16 (7 mantissa bits, spacing 2^-7 at 1.0);
+    # error feedback must recover it over a full 32-step feedback period.
+    g = {"w": jnp.full((128,), 1.0 + 2 ** -12, jnp.float32)}
+    err = init_error_state(g)
+    total_applied = jnp.zeros((128,))
+    n = 64  # two full periods
+    for _ in range(n):
+        cg, err = compress_decompress(g, err)
+        total_applied = total_applied + cg["w"]
+    np.testing.assert_allclose(np.asarray(total_applied) / n,
+                               np.asarray(g["w"]), rtol=1e-4)
+    # without feedback the bias never closes
+    naive = g["w"].astype(jnp.bfloat16).astype(jnp.float32)
+    assert abs(float(naive[0]) - float(g["w"][0])) > 1e-4
+
+
+def test_data_determinism():
+    cfg = get_reduced("qwen1.5-0.5b")
+    dc = DataConfig(seed=5, vocab=cfg.vocab)
+    b1 = make_batch(dc, cfg, CELL, 11, shard=2, n_shards=4)
+    b2 = make_batch(dc, cfg, CELL, 11, shard=2, n_shards=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(dc, cfg, CELL, 12, shard=2, n_shards=4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+class TestElastic:
+    def test_failure_detection(self):
+        cv = ClusterView(timeout_s=10)
+        cv.heartbeat("h0", now=0.0)
+        cv.heartbeat("h1", now=0.0)
+        cv.heartbeat("h0", now=8.0)
+        assert cv.alive(now=12.0) == ["h0"]
+        assert cv.dead(now=12.0) == ["h1"]
+
+    def test_remesh_plan_shrinks(self):
+        pol = ElasticPolicy(devices_per_host=4, model_axis=16, global_batch=256)
+        full = pol.plan(n_hosts=128)          # 512 devices
+        assert full.shape == (32, 16)
+        degraded = pol.plan(n_hosts=100)      # 400 devices
+        assert degraded.shape[1] == 16
+        assert degraded.n_devices <= 400
+        assert 256 % degraded.shape[0] == 0
+
+    def test_remesh_tiny_cluster(self):
+        pol = ElasticPolicy(devices_per_host=4, model_axis=16, global_batch=256)
+        tiny = pol.plan(n_hosts=1)
+        assert tiny.n_devices <= 4
+
+    def test_straggler_ejection(self):
+        det = StragglerDetector(straggler_factor=1.5, patience=2)
+        timings = {f"h{i}": 1.0 for i in range(8)}
+        assert det.observe(timings) == []
+        slow = dict(timings, h3=5.0)
+        assert det.observe(slow) == []        # strike 1
+        assert det.observe(slow) == ["h3"]    # strike 2 -> eject
+
+    def test_straggler_recovers(self):
+        det = StragglerDetector(straggler_factor=1.5, patience=2, ewma=1.0)
+        slow = {f"h{i}": 1.0 for i in range(8)}
+        slow["h3"] = 5.0
+        det.observe(slow)
+        ok = {f"h{i}": 1.0 for i in range(8)}
+        assert det.observe(ok) == []          # strike reset
