@@ -1,50 +1,85 @@
-"""Shared benchmark utilities: dataset/caches, timing, CSV emission."""
+"""Shared benchmark utilities: dataset/catalog caches, timing, CSV emission.
+
+All query execution routes through the unified ``Dataset``/``Engine``
+facade (``repro.engine``); the per-table benchmark modules keep consuming
+the same ``dataset()`` / ``catalog()`` / ``time_query()`` helpers.
+"""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import numpy as np
-
-from repro.core.compiler import compile_bgp
-from repro.core.executor import execute
-from repro.core.sparql import parse_sparql
 from repro.core.stats import Catalog, build_catalog
-from repro.rdf.generator import WatDivConfig, WatDivSchema, generate_watdiv
+from repro.engine import Dataset, Engine
+from repro.rdf.generator import WatDivConfig, generate_watdiv
 
-_DATASETS: Dict[Tuple[float, int], Tuple[np.ndarray, object, WatDivSchema]] = {}
-_CATALOGS: Dict[Tuple[float, int, float, bool], Catalog] = {}
+_RAW: Dict[Tuple[float, int], tuple] = {}
+_DATASETS: Dict[Tuple[float, int, float, bool], Dataset] = {}
+_ENGINES: Dict[Tuple[int, str], Engine] = {}
+
+
+def _raw(scale: float, seed: int = 0):
+    key = (scale, seed)
+    if key not in _RAW:
+        _RAW[key] = generate_watdiv(WatDivConfig(scale_factor=scale,
+                                                 seed=seed))
+    return _RAW[key]
+
+
+def facade(scale: float, seed: int = 0, threshold: float = 1.0,
+           with_extvp: bool = True) -> Dataset:
+    """The cached ``Dataset`` for a WatDiv configuration (the generated
+    graph is shared across thresholds; only the store is rebuilt)."""
+    key = (scale, seed, threshold, with_extvp)
+    if key not in _DATASETS:
+        tt, d, sch = _raw(scale, seed)
+        cat = build_catalog(tt, d, threshold=threshold,
+                            with_extvp=with_extvp)
+        _DATASETS[key] = Dataset(catalog=cat, dictionary=d, schema=sch)
+    return _DATASETS[key]
 
 
 def dataset(scale: float, seed: int = 0):
-    key = (scale, seed)
-    if key not in _DATASETS:
-        _DATASETS[key] = generate_watdiv(WatDivConfig(scale_factor=scale,
-                                                      seed=seed))
-    return _DATASETS[key]
+    """(tt, dictionary, schema) triple — the raw-store view."""
+    return _raw(scale, seed)
 
 
 def catalog(scale: float, seed: int = 0, threshold: float = 1.0,
             with_extvp: bool = True) -> Catalog:
-    key = (scale, seed, threshold, with_extvp)
-    if key not in _CATALOGS:
-        tt, d, sch = dataset(scale, seed)
-        _CATALOGS[key] = build_catalog(tt, d, threshold=threshold,
-                                       with_extvp=with_extvp)
-    return _CATALOGS[key]
+    return facade(scale, seed, threshold, with_extvp).catalog
+
+
+DEFAULT_BACKEND = "eager"
+
+
+def set_default_backend(name: str) -> None:
+    """Route every ``time_query`` through a different ExecutionBackend
+    (``benchmarks/run.py --backend jit``)."""
+    global DEFAULT_BACKEND
+    DEFAULT_BACKEND = name
+
+
+def engine_for(cat: Catalog, layout: str, backend: str = None) -> Engine:
+    """An Engine over an already-built catalog (cached per catalog+layout,
+    so templated benchmark queries hit the plan cache across repeats)."""
+    backend = backend or DEFAULT_BACKEND
+    key = (id(cat), f"{backend}/{layout}")
+    if key not in _ENGINES:
+        ds = Dataset(catalog=cat, dictionary=cat.dictionary)
+        _ENGINES[key] = ds.engine(backend, layout=layout)
+    return _ENGINES[key]
 
 
 def time_query(qtext: str, cat: Catalog, layout: str,
                repeats: int = 3) -> Tuple[float, int]:
     """(best-of-N seconds, result rows)."""
-    d = cat.dictionary
-    q = parse_sparql(qtext, d)
+    eng = engine_for(cat, layout)
     best = float("inf")
     rows = 0
     for _ in range(repeats):
         t0 = time.perf_counter()
-        res = execute(q, cat, layout=layout)
+        res = eng.query(qtext)
         dt = time.perf_counter() - t0
         best = min(best, dt)
         rows = len(res)

@@ -12,8 +12,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import sec74_threshold, table2_load, table3_st, table4_basic, \
-    table5_il
+from benchmarks import common, sec74_threshold, table2_load, table3_st, \
+    table4_basic, table5_il
 from benchmarks.common import Csv
 
 TABLES = {
@@ -29,8 +29,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=5.0)
     ap.add_argument("--only", default=None, choices=list(TABLES))
+    ap.add_argument("--backend", default="eager",
+                    help="ExecutionBackend registry key for query timing")
     args = ap.parse_args()
 
+    common.set_default_backend(args.backend)
     csv = Csv()
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():

@@ -1,21 +1,14 @@
-"""Quickstart: the paper's running example (Figs. 1–12) end to end.
+"""Quickstart: the paper's running example (Figs. 1–12) end to end,
+through the unified ``Dataset``/``Engine`` API.
 
 Builds graph G1, constructs VP + ExtVP with statistics, compiles query Q1
 showing Algorithm-1 table selection + Algorithm-4 join ordering, and
-executes it on all three engines (eager / jitted-static / the VP
-baseline).
+executes it on all registered backends plus the VP storage baseline.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core.compiler import compile_bgp
-from repro.core.executor import execute
-from repro.core.jexec import PlanExecutor
-from repro.core.sparql import parse_sparql
-from repro.core.stats import build_catalog
-from repro.rdf.dictionary import Dictionary
+from repro import Dataset
 
 
 def main() -> None:
@@ -25,45 +18,36 @@ def main() -> None:
         ("C", "follows", "D"), ("A", "likes", "I1"), ("A", "likes", "I2"),
         ("C", "likes", "I2"),
     ]
-    d = Dictionary()
-    tt = d.encode_triples(triples)
-    print(f"G1: {len(tt)} triples, {len(d)} terms")
+    ds = Dataset.from_triples(triples)
+    print(f"G1: {ds.n_triples} triples, {len(ds.dictionary)} terms")
 
     # --- §5: VP + ExtVP construction -------------------------------------------
-    cat = build_catalog(tt, d)
-    rep = cat.storage_report()
+    rep = ds.storage_report()
     print(f"VP tables: {int(rep['vp_tables'])}  "
           f"ExtVP materialized: {int(rep['extvp_tables'])}  "
           f"(empty: {int(rep['extvp_empty'])}, identity: {int(rep['extvp_identity'])})")
-    f, l = d.id_of("follows"), d.id_of("likes")
-    print(f"SF(ExtVP^OS_follows|likes) = {cat.sf('OS', f, l)}   # Fig. 10: 0.25")
+    f, l = ds.dictionary.id_of("follows"), ds.dictionary.id_of("likes")
+    print(f"SF(ExtVP^OS_follows|likes) = {ds.catalog.sf('OS', f, l)}   # Fig. 10: 0.25")
 
     # --- §6: query Q1 -----------------------------------------------------------
-    q1 = parse_sparql(
-        "SELECT * WHERE { ?x likes ?w . ?x follows ?y . "
-        "?y follows ?z . ?z likes ?w }", d)
-    plan = compile_bgp(q1.root, cat)
+    q1 = ("SELECT * WHERE { ?x likes ?w . ?x follows ?y . "
+          "?y follows ?z . ?z likes ?w }")
+    eager = ds.engine("eager")
     print("\ncompiled plan (table selection + join order):")
-    print(" ", plan.describe())
+    print(" ", eager.explain(q1))
 
-    res = execute(q1, cat)
-    rows = [{c: d.term_of(int(v)) for c, v in zip(res.cols, r)}
-            for r in res.data]
+    res = eager.query(q1)
     print("\nresult (paper: ?x→A ?y→B ?z→C ?w→I2):")
-    for r in rows:
-        print(" ", r)
+    for row in res.to_terms():
+        print(" ", row)
 
     # --- device path -------------------------------------------------------------
-    ex = PlanExecutor(plan, cat)
-    data, cols = ex.run()
-    print(f"\njitted static-shape engine agrees: "
-          f"{sorted(map(tuple, data.tolist())) == sorted(map(tuple, res.data[:, [res.cols.index(c) for c in cols]].tolist()))}")
+    res_jit = ds.engine("jit").query(q1)
+    print(f"\njitted static-shape engine agrees: {res_jit.same_as(res)}")
 
-    # --- baseline comparison (align columns: join orders differ) --------------------
-    res_vp = execute(q1, cat, layout="vp")
-    aligned = res_vp.data[:, [res_vp.cols.index(c) for c in res.cols]]
-    print(f"VP baseline result identical: "
-          f"{sorted(map(tuple, aligned.tolist())) == sorted(map(tuple, res.data.tolist()))}")
+    # --- baseline comparison (column order differs; bag comparison aligns) ------
+    res_vp = ds.engine("eager", layout="vp").query(q1)
+    print(f"VP baseline result identical: {res_vp.same_as(res)}")
 
 
 if __name__ == "__main__":

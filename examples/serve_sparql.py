@@ -1,12 +1,14 @@
 """End-to-end driver (the paper's kind: a query engine serving requests).
 
-Generates a WatDiv graph, builds the ExtVP store, then serves a batched
-mixed workload (Basic Testing + IL + ST templates) measuring per-query
-latency and throughput — the serving analogue of the paper's §7
-evaluation, with the statistics short-circuit and layout comparison
-visible per request.
+Generates a WatDiv graph, builds the ExtVP store via the ``Dataset``
+facade, then serves a batched mixed workload (Basic Testing + IL + ST
+templates) through an ``Engine`` — the serving analogue of the paper's §7
+evaluation.  Because the workload repeats templates, the engine's plan
+cache means requests after the first instantiation of each template skip
+parsing and compilation entirely (watch ``plan_hit_rate``).
 
     PYTHONPATH=src python examples/serve_sparql.py --scale 1.0 --requests 60
+    PYTHONPATH=src python examples/serve_sparql.py --backend jit
 """
 
 import argparse
@@ -14,11 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core.compiler import compile_bgp
-from repro.core.executor import execute
-from repro.core.sparql import parse_sparql
-from repro.core.stats import build_catalog
-from repro.rdf.generator import WatDivConfig, generate_watdiv
+from repro import Dataset
 from repro.rdf.workloads import ST_QUERIES, basic_queries, il_queries
 
 
@@ -27,56 +25,44 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--requests", type=int, default=60)
     ap.add_argument("--layout", default="extvp", choices=["extvp", "vp", "tt"])
+    ap.add_argument("--backend", default="eager",
+                    help="ExecutionBackend registry key (eager/jit/...)")
     args = ap.parse_args()
 
     print(f"generating WatDiv SF={args.scale} ...")
     t0 = time.perf_counter()
-    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=args.scale, seed=0))
-    print(f"  {len(tt)} triples in {time.perf_counter()-t0:.2f}s")
-
-    print("building VP + ExtVP store ...")
-    t0 = time.perf_counter()
-    cat = build_catalog(tt, d, threshold=0.25)   # production τ (paper §7.4)
-    rep = cat.storage_report()
-    print(f"  {int(rep['extvp_tables'])} ExtVP tables "
+    ds = Dataset.watdiv(scale=args.scale, seed=0,
+                        threshold=0.25)   # production τ (paper §7.4)
+    rep = ds.storage_report()
+    print(f"  {ds.n_triples} triples; {int(rep['extvp_tables'])} ExtVP tables "
           f"({rep['extvp_over_vp']:.1f}× VP tuples) "
           f"in {time.perf_counter()-t0:.2f}s")
 
     # --- build the request mix ------------------------------------------------
     rng = np.random.default_rng(1)
     pool = list(ST_QUERIES.values())
-    for qs in basic_queries(sch, seed=2, n_instances=2).values():
+    for qs in basic_queries(ds.schema, seed=2, n_instances=2).values():
         pool.extend(qs)
-    for qs in il_queries(sch, seed=3, n_instances=1).values():
+    for qs in il_queries(ds.schema, seed=3, n_instances=1).values():
         pool.extend(qs)
     requests = [pool[rng.integers(0, len(pool))] for _ in range(args.requests)]
 
     # --- serve ------------------------------------------------------------------
-    lat = []
-    empties = 0
-    total_rows = 0
+    engine = ds.engine(args.backend, layout=args.layout)
     t_start = time.perf_counter()
-    for qtext in requests:
-        t0 = time.perf_counter()
-        q = parse_sparql(qtext, d)
-        # statistics short-circuit: provably-empty queries never scan
-        from repro.core.algebra import BGP
-        if isinstance(q.root, BGP) and compile_bgp(q.root, cat, args.layout).empty:
-            empties += 1
-            lat.append(time.perf_counter() - t0)
-            continue
-        res = execute(q, cat, layout=args.layout)
-        total_rows += len(res)
-        lat.append(time.perf_counter() - t0)
+    engine.query_batch(requests)
     wall = time.perf_counter() - t_start
 
-    lat_ms = np.asarray(lat) * 1e3
-    print(f"\nserved {len(requests)} requests in {wall:.2f}s "
-          f"({len(requests)/wall:.1f} qps), layout={args.layout}")
-    print(f"  latency ms: p50={np.percentile(lat_ms,50):.1f} "
-          f"p90={np.percentile(lat_ms,90):.1f} p99={np.percentile(lat_ms,99):.1f} "
-          f"max={lat_ms.max():.1f}")
-    print(f"  result rows: {total_rows}, statistics-only empty answers: {empties}")
+    m = engine.metrics.summary()
+    print(f"\nserved {int(m['served'])} requests in {wall:.2f}s "
+          f"({m['served']/wall:.1f} qps), layout={args.layout}, "
+          f"backend={engine.backend}")
+    print(f"  latency ms: p50={m['p50_ms']:.1f} p90={m['p90_ms']:.1f} "
+          f"p99={m['p99_ms']:.1f}")
+    print(f"  plan-cache hit rate: {m['plan_hit_rate']:.2f} "
+          f"({engine.cache.evictions} evictions)")
+    print(f"  result rows: {int(m['rows'])}, empty answers: "
+          f"{int(m['empties'])} (statistics-only: {int(m['short_circuits'])})")
 
 
 if __name__ == "__main__":

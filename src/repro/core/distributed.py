@@ -36,11 +36,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:                                    # jax >= 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.algebra import is_var
 from repro.core.compiler import Plan, ScanStep
 from repro.core.jexec import (
-    A_NULL, A_SENT, B_NULL, B_SENT, JBindings, device_join, device_scan,
-    _step_meta, _valid_mask,
+    A_NULL, A_SENT, B_NULL, B_SENT, JBindings, bounds_from_plan, device_join,
+    device_scan, _step_meta, _valid_mask,
 )
 from repro.core.stats import Catalog
 from repro.core.table import Table, round_up_pow2
@@ -175,6 +180,7 @@ class DistributedExecutor:
                 scan_est = max(1.0, scan_est * 0.01)
             est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
             self.caps.append(round_up_pow2(int(est * slack) + 16, 16))
+        self._default_bounds = bounds_from_plan(plan)
 
         # Which storage copy each scan uses.  Beyond-paper optimization:
         # simulate the plan's join-key sequence and pick the copy whose
@@ -209,7 +215,7 @@ class DistributedExecutor:
                     acc_cols.append(v)
 
     # -- traced per-shard program ---------------------------------------------
-    def _shard_program(self, caps, *flat_tables):
+    def _shard_program(self, caps, bounds, *flat_tables):
         plan = self.plan
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         acc: Optional[DistBindings] = None
@@ -219,8 +225,10 @@ class DistributedExecutor:
             rows, nrows = flat_tables[ti][0], flat_tables[ti + 1][0]
             ti += 2
             s_bound, o_bound, same, take, cols = _step_meta(step)
-            data, n, ovf = device_scan(rows, nrows, s_bound, o_bound, same,
-                                       take, rows.shape[0])
+            data, n, ovf = device_scan(rows, nrows,
+                                       bounds[i, 0] if s_bound is not None else None,
+                                       bounds[i, 1] if o_bound is not None else None,
+                                       same, take, rows.shape[0])
             copy = self.scan_copy[i]
             part_var = None
             tp = step.tp
@@ -266,21 +274,23 @@ class DistributedExecutor:
         return DistBindings(jb.cols, jb.data, jb.n, jb.overflow | ovf, key)
 
     # -- public API --------------------------------------------------------------
+    bounds_from_plan = staticmethod(bounds_from_plan)
+
     @functools.cached_property
     def _jitted(self):
-        specs = []
+        specs = [P()]                       # bounds (n_steps, 2) replicated
         for shards, copy in zip(self.table_shards, self.scan_copy):
             specs.append(P(self.axes))      # rows (S, cap, 2) split on axes
             specs.append(P(self.axes))      # ns   (S,)
 
-        def wrapper(caps, *flat):
-            fn = jax.shard_map(
+        def wrapper(caps, bounds, *flat):
+            fn = _shard_map(
                 functools.partial(self._shard_program, caps),
                 mesh=self.mesh,
                 in_specs=tuple(specs),
                 out_specs=(P(self.axes), P(self.axes), P(), P()),
             )
-            return fn(*flat)
+            return fn(bounds, *flat)
 
         return jax.jit(wrapper, static_argnums=(0,))
 
@@ -295,13 +305,18 @@ class DistributedExecutor:
     def lower(self, caps: Optional[Tuple[int, ...]] = None):
         caps = caps or tuple(self.caps)
         flat = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in self._flat_inputs()]
-        return self._jitted.lower(caps, *flat)
+        bshape = jax.ShapeDtypeStruct(self._default_bounds.shape, jnp.int32)
+        return self._jitted.lower(caps, bshape, *flat)
 
-    def run(self, max_retries: int = 6) -> Tuple[np.ndarray, Tuple[str, ...]]:
+    def run(self, max_retries: int = 6,
+            bounds: Optional[np.ndarray] = None) -> Tuple[np.ndarray, Tuple[str, ...]]:
         flat = self._flat_inputs()
+        b = self._default_bounds if bounds is None else \
+            np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
+        bj = jnp.asarray(b)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, ns, total, ovf = self._jitted(caps, *flat)
+            data, ns, total, ovf = self._jitted(caps, bj, *flat)
             if not bool(ovf):
                 rows = []
                 data = np.asarray(data)

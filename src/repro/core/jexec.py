@@ -39,7 +39,8 @@ from repro.core.table import round_up_pow2
 from repro.rdf.dictionary import PAD, UNBOUND
 from repro.core.algebra import is_var
 
-__all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan"]
+__all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan",
+           "bounds_from_plan", "trace_count"]
 
 A_SENT = np.int32(2**31 - 1)   # probe-side padded-row key (== PAD)
 B_SENT = np.int32(2**31 - 2)   # build-side padded-row key (sort-max, != A_SENT)
@@ -82,16 +83,21 @@ def _compact(data: jax.Array, keep: jax.Array, out_cap: int,
     return gathered, jnp.minimum(n_keep, out_cap), n_keep > out_cap
 
 
-def device_scan(rows: jax.Array, n: jax.Array, s_bound: Optional[int],
-                o_bound: Optional[int], same_var: bool,
+def device_scan(rows: jax.Array, n: jax.Array, s_bound,
+                o_bound, same_var: bool,
                 out_cols: Sequence[int], out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Select + project one (s, o) table (Algorithm 2, device form)."""
+    """Select + project one (s, o) table (Algorithm 2, device form).
+
+    ``s_bound``/``o_bound`` are ``None`` (statically unbound) or an int32
+    scalar — python int or traced value.  Passing bound constants as
+    traced runtime values is what lets one compiled program serve every
+    instantiation of a query template (constant re-binding)."""
     cap = rows.shape[0]
     keep = _valid_mask(cap, n)
     if s_bound is not None:
-        keep &= rows[:, 0] == jnp.int32(s_bound)
+        keep &= rows[:, 0] == s_bound
     if o_bound is not None:
-        keep &= rows[:, 1] == jnp.int32(o_bound)
+        keep &= rows[:, 1] == o_bound
     if same_var:
         keep &= rows[:, 0] == rows[:, 1]
     projected = rows[:, list(out_cols)] if out_cols else rows[:, :0]
@@ -181,6 +187,28 @@ def _step_meta(step: ScanStep) -> Tuple[Optional[int], Optional[int], bool,
     return s_bound, o_bound, same, tuple(take), tuple(cols)
 
 
+_TRACE_COUNT = 0   # program traces (== XLA compiles); test probe
+
+
+def trace_count() -> int:
+    """Number of static programs traced so far in this process.  A served
+    template workload should increase this once per (template, caps), not
+    once per request — the observable for "no recompilation on re-bind"."""
+    return _TRACE_COUNT
+
+
+def bounds_from_plan(plan: Plan) -> np.ndarray:
+    """Per-step (s, o) bound-constant values, UNBOUND where the slot is a
+    variable — the runtime argument vector of the compiled program."""
+    out = np.full((len(plan.steps), 2), UNBOUND, dtype=np.int32)
+    for i, step in enumerate(plan.steps):
+        if not is_var(step.tp.s):
+            out[i, 0] = int(step.tp.s)
+        if not is_var(step.tp.o):
+            out[i, 1] = int(step.tp.o)
+    return out
+
+
 class PlanExecutor:
     """Builds and runs the jitted static program for a compiled Plan.
 
@@ -188,7 +216,14 @@ class PlanExecutor:
     i-th join output); scan caps are table capacities.  ``run`` retries
     with doubled caps on overflow (host loop, geometric — at most
     ~log2(result/estimate) recompiles, amortized across a served workload).
+
+    Bound s/o constants enter the program as runtime int32 scalars (their
+    *presence* is static, their values are not), so every instantiation of
+    a query template shares one compiled program — ``run(bounds=...)``
+    re-binds without re-tracing.
     """
+
+    bounds_from_plan = staticmethod(bounds_from_plan)
 
     def __init__(self, plan: Plan, catalog: Catalog, slack: float = 1.5):
         if plan.empty:
@@ -208,16 +243,22 @@ class PlanExecutor:
                 scan_est = max(1.0, scan_est * 0.01)
             est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
             self.caps.append(round_up_pow2(int(est * slack) + 8, 16))
+        self._default_bounds = bounds_from_plan(plan)
 
     # -- the traced program --------------------------------------------------
     def _program(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
-                 table_ns: List[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 table_ns: List[jax.Array],
+                 bounds: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1
         plan = self.plan
         acc: Optional[JBindings] = None
         for i, step in enumerate(plan.steps):
             s_bound, o_bound, same, take, cols = _step_meta(step)
-            data, n, ovf = device_scan(table_rows[i], table_ns[i], s_bound,
-                                       o_bound, same, take,
+            data, n, ovf = device_scan(table_rows[i], table_ns[i],
+                                       bounds[i, 0] if s_bound is not None else None,
+                                       bounds[i, 1] if o_bound is not None else None,
+                                       same, take,
                                        caps[i] if i == 0 else table_rows[i].shape[0])
             cur = JBindings(cols, data, n, ovf)
             if acc is None:
@@ -236,14 +277,19 @@ class PlanExecutor:
         rows = [jax.ShapeDtypeStruct((round_up_pow2(len(t)), 2), jnp.int32)
                 for t in self.tables]
         ns = [jax.ShapeDtypeStruct((), jnp.int32) for _ in self.tables]
-        return self._jitted.lower(caps, rows, ns)
+        bshape = jax.ShapeDtypeStruct(self._default_bounds.shape, jnp.int32)
+        return self._jitted.lower(caps, rows, ns, bshape)
 
-    def run(self, max_retries: int = 8) -> Tuple[np.ndarray, Tuple[str, ...]]:
+    def run(self, max_retries: int = 8,
+            bounds: Optional[np.ndarray] = None) -> Tuple[np.ndarray, Tuple[str, ...]]:
         rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
         ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
+        b = self._default_bounds if bounds is None else \
+            np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
+        bj = jnp.asarray(b)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, n, ovf = self._jitted(caps, rows, ns)
+            data, n, ovf = self._jitted(caps, rows, ns, bj)
             if not bool(ovf):
                 n = int(n)
                 cols = self._final_cols()

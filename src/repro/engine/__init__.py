@@ -1,0 +1,33 @@
+"""Unified public API: ``Dataset`` + ``Engine`` over pluggable backends.
+
+    from repro.engine import Dataset
+
+    ds = Dataset.watdiv(scale=0.5, threshold=0.25)
+    eng = ds.engine("jit")                  # or "eager" / "distributed"
+    res = eng.query("SELECT * WHERE { ?u wsdbm:follows ?v . "
+                    "?v wsdbm:likes ?p }")
+    res.to_terms()                          # dictionary-decoded rows
+
+Templated queries (same shape, different constants) hit the plan cache:
+parsing and compilation happen once per template, constants re-bind as
+runtime values (see :mod:`repro.engine.template`).
+"""
+
+from repro.engine.backends import (
+    ExecutionBackend, ExecutionContext, PreparedQuery, available_backends,
+    create_backend, register_backend,
+)
+from repro.engine.dataset import Dataset
+from repro.engine.engine import Engine, PlanCache, ServerMetrics
+from repro.engine.result import Result
+from repro.engine.template import (
+    ConstantBinding, QueryTemplate, template_signature,
+)
+
+__all__ = [
+    "Dataset", "Engine", "Result",
+    "ExecutionBackend", "ExecutionContext", "PreparedQuery",
+    "register_backend", "create_backend", "available_backends",
+    "QueryTemplate", "ConstantBinding", "template_signature",
+    "ServerMetrics", "PlanCache",
+]

@@ -1,0 +1,275 @@
+"""Pluggable execution backends behind one protocol.
+
+S2RDF's design point is that one relational layer (ExtVP + Algorithm-1/4
+compilation) serves any query shape on any execution substrate; this
+module is where the substrates plug in.  A backend turns a
+:class:`~repro.engine.template.QueryTemplate` into a
+:class:`PreparedQuery` — the expensive, template-level artifact (parsed
+tree, compiled plan, jitted XLA program, sharded storage) — and a
+prepared query runs any constant instantiation via a
+:class:`~repro.engine.template.ConstantBinding` without re-parsing or
+re-compiling.
+
+Built-in backends:
+
+* ``eager``        — host numpy reference engine (exact dynamic shapes).
+* ``jit``          — static-shape XLA program (:mod:`repro.core.jexec`);
+                     bound constants are runtime arguments, so one
+                     compiled program serves every instantiation.
+* ``distributed``  — shard_map over a device mesh
+                     (:mod:`repro.core.distributed`); requires ``mesh``.
+
+New backends (Pallas probe paths, cached/sharded layouts, remote
+engines) register with :func:`register_backend` and become addressable by
+name everywhere a backend string is accepted — no call-site changes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.algebra import BGP, Query
+from repro.core.compiler import Plan, compile_bgp
+from repro.core.executor import Bindings, execute, execute_plan, _project
+from repro.core.stats import Catalog
+from repro.engine.result import Result
+from repro.engine.template import (
+    ConstantBinding, QueryTemplate, node_vars, rebind_plan, substitute_query,
+)
+
+__all__ = [
+    "ExecutionContext", "PreparedQuery", "ExecutionBackend",
+    "register_backend", "create_backend", "available_backends",
+]
+
+_NO_BINDING = ConstantBinding(mapping={}, missing=False)
+
+
+@dataclass
+class ExecutionContext:
+    """Everything a backend needs to prepare and run queries."""
+
+    catalog: Catalog
+    dictionary: object = None            # Optional[repro.rdf.Dictionary]
+    layout: str = "extvp"
+    mesh: object = None                  # Optional[jax.sharding.Mesh]
+
+
+class PreparedQuery:
+    """A template compiled for one backend; run any instantiation of it.
+
+    ``run(binding)`` evaluates the prepared program under a constant
+    binding (``None`` for slot-free queries).  Subclasses hold whatever
+    per-template state their engine needs.
+    """
+
+    backend: str = "?"
+
+    def __init__(self, template: QueryTemplate, ctx: ExecutionContext):
+        self.template = template
+        self.ctx = ctx
+        self.query: Query = template.query
+
+    # -- interface -------------------------------------------------------------
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        raise NotImplementedError
+
+    # -- shared helpers --------------------------------------------------------
+    @property
+    def out_cols(self) -> Tuple[str, ...]:
+        if self.query.select is not None:
+            return tuple(self.query.select)
+        return node_vars(self.query.root)
+
+    def _empty(self) -> Result:
+        return Result.empty(self.out_cols, self.ctx.dictionary)
+
+    def _finalize(self, b: Bindings) -> Result:
+        b = _project(b, self.query.select)
+        if self.query.distinct:
+            b = Bindings(b.cols, np.unique(b.data, axis=0))
+        return Result(b, self.ctx.dictionary)
+
+
+class _EmptyPrepared(PreparedQuery):
+    """Statistics-proven empty template: answered without touching data."""
+
+    def __init__(self, template, ctx, backend: str):
+        super().__init__(template, ctx)
+        self.backend = backend
+        self.plan = Plan(empty=True, vars=self.out_cols)
+
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        return self._empty()
+
+
+class _EagerPrepared(PreparedQuery):
+    """Host numpy engine.  BGP-rooted queries cache the compiled plan and
+    re-bind scan constants; operator trees (FILTER/OPTIONAL/...) cache the
+    parsed tree and re-bind by id substitution."""
+
+    backend = "eager"
+
+    def __init__(self, template, ctx):
+        super().__init__(template, ctx)
+        self.plan: Optional[Plan] = None
+        if isinstance(self.query.root, BGP) and ctx.layout != "pt":
+            self.plan = compile_bgp(self.query.root, ctx.catalog, ctx.layout)
+
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        binding = binding or _NO_BINDING
+        if binding.missing:
+            return self._empty()
+        if self.plan is not None:
+            if self.plan.empty:
+                return self._empty()
+            plan = rebind_plan(self.plan, binding.mapping)
+            return self._finalize(execute_plan(plan, self.ctx.catalog))
+        query = substitute_query(self.query, binding.mapping)
+        return Result(execute(query, self.ctx.catalog, layout=self.ctx.layout),
+                      self.ctx.dictionary)
+
+
+class _JitPrepared(PreparedQuery):
+    """Static-shape XLA program, compiled once per template.  Bound
+    constants are runtime scalars, so re-binding never re-traces."""
+
+    backend = "jit"
+
+    def __init__(self, template, ctx, executor):
+        super().__init__(template, ctx)
+        self.executor = executor
+        self.plan: Plan = executor.plan
+
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        binding = binding or _NO_BINDING
+        if binding.missing:
+            return self._empty()
+        plan = rebind_plan(self.plan, binding.mapping)
+        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
+        return self._finalize(Bindings(cols, data))
+
+    def lower(self, caps=None):
+        return self.executor.lower(caps)
+
+
+class _DistributedPrepared(PreparedQuery):
+    """shard_map engine over a mesh; table shards and the per-shard
+    program are template-level state, constants are runtime scalars."""
+
+    backend = "distributed"
+
+    def __init__(self, template, ctx, executor):
+        super().__init__(template, ctx)
+        self.executor = executor
+        self.plan: Plan = executor.plan
+
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        binding = binding or _NO_BINDING
+        if binding.missing:
+            return self._empty()
+        plan = rebind_plan(self.plan, binding.mapping)
+        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
+        return self._finalize(Bindings(cols, data))
+
+    def lower(self, caps=None):
+        return self.executor.lower(caps)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class ExecutionBackend:
+    """Protocol: ``prepare(template, ctx) -> PreparedQuery``."""
+
+    name: str = "?"
+
+    def prepare(self, template: QueryTemplate,
+                ctx: ExecutionContext) -> PreparedQuery:
+        raise NotImplementedError
+
+
+class EagerBackend(ExecutionBackend):
+    name = "eager"
+
+    def prepare(self, template, ctx):
+        return _EagerPrepared(template, ctx)
+
+
+class JitBackend(ExecutionBackend):
+    """Non-BGP operator trees run on the eager path (same results; BGPs
+    dominate served workloads, cf. paper §2.1), as do TT-layout scans
+    (the device path requires bound predicates)."""
+
+    name = "jit"
+
+    def prepare(self, template, ctx):
+        if not isinstance(template.query.root, BGP) or ctx.layout == "pt":
+            return _EagerPrepared(template, ctx)
+        plan = compile_bgp(template.query.root, ctx.catalog, ctx.layout)
+        if plan.empty:
+            return _EmptyPrepared(template, ctx, self.name)
+        from repro.core.jexec import PlanExecutor
+        try:
+            ex = PlanExecutor(plan, ctx.catalog)
+        except NotImplementedError:
+            return _EagerPrepared(template, ctx)
+        return _JitPrepared(template, ctx, ex)
+
+
+class DistributedBackend(ExecutionBackend):
+    name = "distributed"
+
+    def __init__(self, dual_partition: bool = False):
+        self.dual_partition = dual_partition
+
+    def prepare(self, template, ctx):
+        if ctx.mesh is None:
+            raise ValueError("distributed backend needs a mesh")
+        if not isinstance(template.query.root, BGP) or ctx.layout == "pt":
+            return _EagerPrepared(template, ctx)
+        plan = compile_bgp(template.query.root, ctx.catalog, ctx.layout)
+        if plan.empty:
+            return _EmptyPrepared(template, ctx, self.name)
+        from repro.core.distributed import DistributedExecutor
+        try:
+            ex = DistributedExecutor(plan, ctx.catalog, ctx.mesh,
+                                     dual_partition=self.dual_partition)
+        except NotImplementedError:
+            return _EagerPrepared(template, ctx)
+        return _DistributedPrepared(template, ctx, ex)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ExecutionBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[[], ExecutionBackend]) -> None:
+    """Register (or replace) a backend under a string key."""
+    _REGISTRY[name] = factory
+
+
+def create_backend(name: str) -> ExecutionBackend:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_backend("eager", EagerBackend)
+register_backend("jit", JitBackend)
+register_backend("distributed", DistributedBackend)

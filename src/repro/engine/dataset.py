@@ -1,0 +1,105 @@
+"""The ``Dataset`` facade: one object owning the whole storage stack.
+
+S2RDF's data layer is a pipeline — dictionary-encode the triples, build
+VP tables, semi-join-reduce them into ExtVP with selectivity statistics
+(paper §5) — that every entry point used to hand-wire.  ``Dataset`` owns
+that pipeline end to end and hands out :class:`~repro.engine.engine.Engine`
+instances bound to any registered execution backend.
+
+    ds = Dataset.watdiv(scale=1.0, seed=0, threshold=0.25)
+    eng = ds.engine("jit")
+    res = eng.query("SELECT * WHERE { ?u wsdbm:follows ?v }")
+    res.to_terms()
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.stats import Catalog, build_catalog
+from repro.core.vp import KINDS
+from repro.engine.engine import Engine
+from repro.engine.result import Result
+
+__all__ = ["Dataset"]
+
+
+@dataclass
+class Dataset:
+    """A loaded RDF graph: dictionary + TT + VP + ExtVP(τ) + statistics."""
+
+    catalog: Catalog
+    dictionary: object = None          # repro.rdf.Dictionary
+    schema: object = None              # Optional[WatDivSchema]
+    _engines: Dict[tuple, Engine] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.dictionary is None:
+            self.dictionary = self.catalog.dictionary
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_triples(cls, triples: Iterable[Tuple[str, str, str]],
+                     threshold: float = 1.0,
+                     kinds: Tuple[str, ...] = KINDS,
+                     with_extvp: bool = True) -> "Dataset":
+        """Build the full store from (s, p, o) string triples."""
+        from repro.rdf.dictionary import Dictionary
+        d = Dictionary()
+        tt = d.encode_triples(triples)
+        cat = build_catalog(tt, d, threshold=threshold, kinds=kinds,
+                            with_extvp=with_extvp)
+        return cls(catalog=cat, dictionary=d)
+
+    @classmethod
+    def watdiv(cls, scale: float = 1.0, seed: int = 0,
+               threshold: float = 1.0,
+               kinds: Tuple[str, ...] = KINDS,
+               with_extvp: bool = True) -> "Dataset":
+        """Generate a WatDiv-like graph (paper §7) and build its store."""
+        from repro.rdf.generator import WatDivConfig, generate_watdiv
+        tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=scale,
+                                                  seed=seed))
+        cat = build_catalog(tt, d, threshold=threshold, kinds=kinds,
+                            with_extvp=with_extvp)
+        return cls(catalog=cat, dictionary=d, schema=sch)
+
+    @classmethod
+    def from_ntriples(cls, path: str, threshold: float = 1.0,
+                      kinds: Tuple[str, ...] = KINDS,
+                      with_extvp: bool = True) -> "Dataset":
+        """Load an N-Triples file (the paper's input format)."""
+        from repro.rdf.ntriples import parse_ntriples
+        with open(path) as f:
+            triples = parse_ntriples(f.read())
+        return cls.from_triples(triples, threshold=threshold, kinds=kinds,
+                                with_extvp=with_extvp)
+
+    # -- engines --------------------------------------------------------------
+    def engine(self, backend: str = "eager", layout: str = "extvp",
+               mesh=None, plan_cache_size: int = 512) -> Engine:
+        """An :class:`Engine` over this dataset.  Engines are cached per
+        (backend, layout, mesh) so repeated calls share plan caches."""
+        key = (backend, layout, id(mesh))
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = Engine(self, backend=backend, layout=layout, mesh=mesh,
+                         plan_cache_size=plan_cache_size)
+            self._engines[key] = eng
+        return eng
+
+    def query(self, qtext: str, backend: str = "eager",
+              layout: str = "extvp", mesh=None) -> Result:
+        """One-shot convenience: ``ds.engine(backend).query(qtext)``."""
+        return self.engine(backend, layout, mesh).query(qtext)
+
+    # -- storage --------------------------------------------------------------
+    @property
+    def n_triples(self) -> int:
+        return self.catalog.n_triples
+
+    def storage_report(self) -> Dict[str, float]:
+        return self.catalog.storage_report()

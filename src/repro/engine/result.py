@@ -1,0 +1,80 @@
+"""Uniform query-result type for every execution backend.
+
+All engines produce the same logical object — a bag of solution mappings
+over id-encoded columns — but historically returned it in three shapes
+(``Bindings``, ``(np.ndarray, cols)``, sharded arrays).  ``Result`` wraps
+the canonical :class:`~repro.core.executor.Bindings` plus the dictionary
+so callers can decode ids back to RDF terms and compare results across
+backends under SPARQL bag semantics (column order is presentation, not
+identity).
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import Bindings
+from repro.rdf.dictionary import UNBOUND
+
+__all__ = ["Result"]
+
+
+@dataclass
+class Result:
+    """A relation over query variables, with optional term decoding."""
+
+    bindings: Bindings
+    dictionary: Optional[object] = None   # repro.rdf.Dictionary
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def cols(self) -> Tuple[str, ...]:
+        return self.bindings.cols
+
+    @property
+    def data(self) -> np.ndarray:
+        return self.bindings.data
+
+    def __len__(self) -> int:
+        return len(self.bindings)
+
+    @staticmethod
+    def empty(cols: Sequence[str], dictionary=None) -> "Result":
+        return Result(Bindings.empty(tuple(cols)), dictionary)
+
+    # -- views ---------------------------------------------------------------
+    def to_numpy(self) -> np.ndarray:
+        """The (n, n_vars) int32 id matrix."""
+        return self.bindings.data
+
+    def to_terms(self) -> List[Dict[str, str]]:
+        """Dictionary-decoded rows: one ``{var: term}`` mapping per
+        solution (unbound OPTIONAL slots are omitted)."""
+        if self.dictionary is None:
+            raise ValueError("Result has no dictionary to decode with")
+        out: List[Dict[str, str]] = []
+        for row in self.bindings.data.tolist():
+            out.append({c: self.dictionary.term_of(int(v))
+                        for c, v in zip(self.cols, row) if v != UNBOUND})
+        return out
+
+    # -- comparison (SPARQL bag semantics) -----------------------------------
+    def as_multiset(self, cols: Optional[Sequence[str]] = None) -> Counter:
+        """Bag of solution tuples over ``cols`` (default: sorted columns,
+        making the bag independent of backend column order)."""
+        order = sorted(self.cols) if cols is None else list(cols)
+        idx = [self.cols.index(c) for c in order]
+        if not idx:
+            return Counter({(): len(self)}) if len(self) else Counter()
+        return Counter(map(tuple, self.bindings.data[:, idx].tolist()))
+
+    def same_as(self, other: "Result") -> bool:
+        """Multiset equality over the shared column set; False when the
+        two results bind different variables."""
+        if set(self.cols) != set(other.cols):
+            return False
+        return self.as_multiset() == other.as_multiset()

@@ -125,29 +125,34 @@ def build_s2rdf_cell(mesh_kind: str, scale: float = 2.0,
     ``layout="vp"`` compiles the same query against the VP baseline —
     the collective-byte ratio vs "extvp" is the paper's central claim
     (semi-join reduction shrinks shuffle traffic) measured on ICI."""
-    from repro.core.compiler import compile_bgp
-    from repro.core.distributed import DistributedExecutor
-    from repro.core.sparql import parse_sparql
-    from repro.core.stats import build_catalog
-    from repro.rdf.generator import WatDivConfig, generate_watdiv
+    from repro.engine import Dataset
+    from repro.engine.backends import DistributedBackend
 
-    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=scale, seed=0))
-    cat = build_catalog(tt, d)
-    q = parse_sparql(
-        "SELECT * WHERE { ?u wsdbm:follows ?v . ?v wsdbm:likes ?p . "
-        "?p sorg:price ?x . ?p rev:hasReview ?r . ?r rev:reviewer ?w }", d)
-    plan = compile_bgp(q.root, cat, layout=layout)
+    ds = Dataset.watdiv(scale=scale, seed=0)
     mesh = make_query_mesh(multi_pod=(mesh_kind == "multi"))
-    ex = DistributedExecutor(plan, cat, mesh, dual_partition=dual_partition)
-    return ex, plan
+    engine = ds.engine(DistributedBackend(dual_partition=dual_partition),
+                       layout=layout, mesh=mesh)
+    prepared = engine.prepare(
+        "SELECT * WHERE { ?u wsdbm:follows ?v . ?v wsdbm:likes ?p . "
+        "?p sorg:price ?x . ?p rev:hasReview ?r . ?r rev:reviewer ?w }")
+    return prepared, prepared.plan
 
 
 # ---------------------------------------------------------------------------
 # Record extraction
 # ---------------------------------------------------------------------------
 
-def _raw_costs(compiled) -> Dict[str, float]:
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions (older
+    releases return a one-element list of per-program dicts)."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _raw_costs(compiled) -> Dict[str, float]:
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -180,7 +185,7 @@ def corrected_costs(a1: Dict[str, float], ak: Dict[str, float], g: int,
 
 def analyze(compiled, n_chips: int, mflops: Optional[float],
             costs: Optional[Dict[str, float]] = None) -> Dict[str, Any]:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     mem = compiled.memory_analysis()

@@ -19,32 +19,27 @@ from repro.models.api import Model
 
 
 def serve_sparql(args) -> None:
-    from repro.core.compiler import compile_bgp
-    from repro.core.distributed import DistributedExecutor
-    from repro.core.sparql import parse_sparql
-    from repro.core.stats import build_catalog
-    from repro.rdf.generator import WatDivConfig, generate_watdiv
+    from repro.engine import Dataset
     from repro.rdf.workloads import ST_QUERIES
 
-    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=args.scale, seed=0))
-    cat = build_catalog(tt, d, threshold=0.25)
+    ds = Dataset.watdiv(scale=args.scale, seed=0, threshold=0.25)
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    print(f"store: {len(tt)} triples on {jax.device_count()} shard(s)")
+    engine = ds.engine(args.backend, mesh=mesh if args.backend == "distributed"
+                       else None)
+    print(f"store: {ds.n_triples} triples on {jax.device_count()} shard(s), "
+          f"backend={engine.backend}")
 
-    served = 0
     t0 = time.perf_counter()
     for name, qtext in ST_QUERIES.items():
-        q = parse_sparql(qtext, d)
-        plan = compile_bgp(q.root, cat)
-        if plan.empty:
-            print(f"  {name}: ∅ (statistics short-circuit)")
-            served += 1
-            continue
-        ex = DistributedExecutor(plan, cat, mesh)
-        data, cols = ex.run()
-        print(f"  {name}: {len(data)} rows")
-        served += 1
-    print(f"served {served} queries in {time.perf_counter()-t0:.2f}s")
+        res = engine.query(qtext)
+        if len(res) == 0:
+            print(f"  {name}: ∅")
+        else:
+            print(f"  {name}: {len(res)} rows")
+    m = engine.metrics.summary()
+    print(f"served {int(m['served'])} queries in {time.perf_counter()-t0:.2f}s "
+          f"(p50 {m['p50_ms']:.1f} ms, {int(m['short_circuits'])} "
+          f"statistics-only empties)")
 
 
 def serve_lm(args) -> None:
@@ -68,6 +63,8 @@ def serve_lm(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="sparql", choices=["sparql", "lm"])
+    ap.add_argument("--backend", default="distributed",
+                    help="ExecutionBackend registry key (eager/jit/distributed)")
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)

@@ -1,151 +1,76 @@
-"""Batched SPARQL serving engine — the production front end of the
-paper's system (S2RDF is a query *processor*; serving is its deployment
-shape).
+"""Batched SPARQL serving front end — now a thin shell over the unified
+:mod:`repro.engine` facade.
 
-Responsibilities beyond the raw executors:
+Everything this module used to hand-roll (template-signature plan cache,
+per-backend executor wiring, statistics short-circuit accounting, metrics)
+lives in :class:`repro.engine.Engine`; ``SparqlServer`` remains as the
+stable serving-layer entry point:
 
-* **Plan cache.**  Parsing + Algorithm-1/4 compilation is per-query-string
+* **Plan cache.**  Parsing + Algorithm-1/4 compilation is per-template
   work; a served workload repeats templates with different constants, so
-  plans are cached on the *template signature* (the query text with bound
-  terms normalized out) — the constants only re-bind the scan selections.
-  This mirrors S2RDF's note that repeated Virtuoso queries benefit from
-  caching while its own runtimes are stable: here we cache compilation,
-  never results.
-* **Statistics short-circuit.**  Provably-empty plans (SF = 0 pairs,
-  missing terms) are answered without touching data and counted in the
-  metrics (the ST-8 behaviour, now visible per request).
-* **Engine selection.**  ``backend="eager"`` (host numpy),
-  ``"jit"`` (static-shape XLA path, per-plan compiled programs cached) or
-  ``"distributed"`` (shard_map over a mesh).
+  prepared queries are cached in a bounded LRU on the template signature
+  and the constants re-bind as runtime values — no re-parse, no
+  re-compile (we cache compilation, never results).
+* **Statistics short-circuit.**  Provably-empty plans are answered
+  without touching data and counted in the metrics.
+* **Engine selection.**  Any registered ExecutionBackend: ``"eager"``
+  (host numpy), ``"jit"`` (static-shape XLA programs) or
+  ``"distributed"`` (shard_map over a mesh) out of the box.
 * **Metrics.**  Latency percentiles, plan-cache hit rate, empty-answer
   count, rows served — what an operator dashboards.
 """
 
 from __future__ import annotations
 
-import re
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
-import numpy as np
-
-from repro.core.algebra import BGP, Query
-from repro.core.compiler import Plan, compile_bgp
-from repro.core.executor import Bindings, execute
-from repro.core.sparql import parse_sparql
 from repro.core.stats import Catalog
+from repro.engine import (
+    Dataset, Engine, Result, ServerMetrics, available_backends,
+    template_signature,
+)
 
-# Entity constants: IRIs, literals, and prefixed names with a numeric tail
-# (instance ids like wsdbm:User3).  Schema terms — predicates, class names
-# without instance suffixes — are left intact: they determine table
-# selection, so they are part of the plan identity.
-_CONST_RE = re.compile(
-    r"(?:<[^>]*>|\"(?:[^\"\\]|\\.)*\"|(?<![?\w])[A-Za-z_][\w\-]*:[\w\-\.]*\d)")
-
-
-def template_signature(qtext: str) -> str:
-    """Normalize bound entity terms so template instantiations share a
-    plan slot."""
-    return _CONST_RE.sub("¤", " ".join(qtext.split()))
-
-
-@dataclass
-class ServerMetrics:
-    served: int = 0
-    rows: int = 0
-    empties: int = 0
-    plan_hits: int = 0
-    plan_misses: int = 0
-    latencies_ms: List[float] = field(default_factory=list)
-
-    def summary(self) -> Dict[str, float]:
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
-        return {
-            "served": self.served,
-            "rows": self.rows,
-            "empties": self.empties,
-            "plan_hit_rate": self.plan_hits / max(self.plan_hits
-                                                  + self.plan_misses, 1),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p90_ms": float(np.percentile(lat, 90)),
-            "p99_ms": float(np.percentile(lat, 99)),
-        }
+__all__ = ["SparqlServer", "ServerMetrics", "template_signature"]
 
 
 class SparqlServer:
-    """Serve SPARQL queries over a loaded ExtVP catalog."""
+    """Serve SPARQL queries over a loaded ExtVP catalog.
+
+    A facade over ``Dataset.engine(backend)``; kept for serving-layer
+    ergonomics and backwards compatibility.
+    """
 
     def __init__(self, catalog: Catalog, layout: str = "extvp",
                  backend: str = "eager", mesh=None,
                  plan_cache_size: int = 512):
-        assert backend in ("eager", "jit", "distributed")
-        if backend == "distributed" and mesh is None:
-            raise ValueError("distributed backend needs a mesh")
+        if backend not in available_backends():
+            raise ValueError(
+                f"unknown backend {backend!r}; available: {available_backends()}")
+        self.dataset = Dataset(catalog=catalog, dictionary=catalog.dictionary)
+        self.engine: Engine = self.dataset.engine(
+            backend, layout=layout, mesh=mesh,
+            plan_cache_size=plan_cache_size)
         self.catalog = catalog
         self.layout = layout
         self.backend = backend
         self.mesh = mesh
-        self.metrics = ServerMetrics()
-        self._plan_cache: Dict[str, Query] = {}
-        self._exec_cache: Dict[str, object] = {}
-        self._cache_size = plan_cache_size
 
-    # -- internals -------------------------------------------------------------
-    def _parse_cached(self, qtext: str) -> Tuple[Query, str]:
-        sig = template_signature(qtext)
-        # The algebra tree depends on the actual constants (ids differ), so
-        # the cache stores per-signature *presence*; a hit means we skip
-        # nothing parser-wise but reuse the compiled executor below.  For
-        # eager mode the win is the executor reuse; parse cost is trivial.
-        query = parse_sparql(qtext, self.catalog.dictionary)
-        if sig in self._plan_cache:
-            self.metrics.plan_hits += 1
-        else:
-            self.metrics.plan_misses += 1
-            if len(self._plan_cache) < self._cache_size:
-                self._plan_cache[sig] = query
-        return query, sig
+    @property
+    def metrics(self) -> ServerMetrics:
+        return self.engine.metrics
 
-    def _execute(self, query: Query, sig: str) -> Bindings:
-        if self.backend == "eager":
-            return execute(query, self.catalog, layout=self.layout)
+    # Back-compat views of the (now unified, bounded) prepared-query LRU.
+    @property
+    def _plan_cache(self):
+        return self.engine.cache
 
-        if not isinstance(query.root, BGP):
-            # non-BGP operators run on the eager path (same results; BGPs
-            # dominate served workloads, cf. paper §2.1)
-            return execute(query, self.catalog, layout=self.layout)
-
-        plan = compile_bgp(query.root, self.catalog, layout=self.layout)
-        if plan.empty:
-            return Bindings.empty(plan.vars)
-
-        if self.backend == "jit":
-            from repro.core.jexec import PlanExecutor
-            ex = self._exec_cache.get(sig)
-            if ex is None or getattr(ex, "plan", None) is None \
-                    or ex.plan.describe() != plan.describe():
-                ex = PlanExecutor(plan, self.catalog)
-                self._exec_cache[sig] = ex
-            data, cols = ex.run()
-            return Bindings(cols, data)
-
-        from repro.core.distributed import DistributedExecutor
-        ex = DistributedExecutor(plan, self.catalog, self.mesh)
-        data, cols = ex.run()
-        return Bindings(cols, data)
+    @property
+    def _exec_cache(self):
+        return self.engine.cache
 
     # -- public API ----------------------------------------------------------------
-    def query(self, qtext: str) -> Bindings:
-        t0 = time.perf_counter()
-        query, sig = self._parse_cached(qtext)
-        res = self._execute(query, sig)
-        self.metrics.latencies_ms.append((time.perf_counter() - t0) * 1e3)
-        self.metrics.served += 1
-        self.metrics.rows += len(res)
-        if len(res) == 0:
-            self.metrics.empties += 1
-        return res
+    def query(self, qtext: str) -> Result:
+        return self.engine.query(qtext)
 
-    def query_batch(self, qtexts: List[str]) -> List[Bindings]:
-        return [self.query(q) for q in qtexts]
+    def query_batch(self, qtexts: List[str]) -> List[Result]:
+        return self.engine.query_batch(qtexts)

@@ -1,0 +1,165 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+The tier-1 suite must collect (and the property tests should still
+exercise randomized inputs) on a clean environment without the real
+``hypothesis`` package.  ``conftest.py`` installs this module under the
+``hypothesis`` / ``hypothesis.strategies`` names ONLY when the real
+package is missing.
+
+Covered surface: ``given``, ``settings(max_examples=, deadline=)``,
+``strategies.integers/sampled_from/data/composite``.  Draws come from a
+deterministic per-test ``numpy`` RNG, so failures are reproducible; there
+is no shrinking.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import sys
+import types
+from typing import Any, Callable, List
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A thunk from RNG to value."""
+
+    def __init__(self, fn: Callable[[np.random.Generator], Any]):
+        self._fn = fn
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        return self._fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: np.random.Generator) -> List[Any]:
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.sample(rng) for s in strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+class _DataObject:
+    """`st.data()` draw handle."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str = "") -> Any:
+        return strategy.sample(self._rng)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rng: _DataObject(rng))
+
+
+def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+    def build(*args, **kwargs) -> SearchStrategy:
+        def draw_value(rng: np.random.Generator):
+            handle = _DataObject(rng)
+            return fn(handle.draw, *args, **kwargs)
+        return SearchStrategy(draw_value)
+    return build
+
+
+def settings(*args, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline=None, **kwargs):
+    def apply(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return apply
+
+
+def assume(condition: bool) -> None:
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def given(*strategies: SearchStrategy):
+    """Run the test body for N deterministic examples.
+
+    The wrapper hides the drawn parameters from pytest's fixture
+    resolution (varargs are not fixture names), so given-tests compose
+    with plain fixtures exactly like under real hypothesis as long as the
+    drawn arguments come last — the only pattern this suite uses.
+    """
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed0 = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:4], "big")
+            for i in range(n):
+                rng = np.random.default_rng((seed0 + i) % 2**32)
+                drawn = [s.sample(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(getattr(fn, "__dict__", {}))
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    shim = types.ModuleType("hypothesis")
+    shim.given = given
+    shim.settings = settings
+    shim.assume = assume
+    shim.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats", "lists",
+                 "tuples", "just", "data", "composite", "SearchStrategy"):
+        setattr(strategies, name, globals()[name])
+    shim.strategies = strategies
+    shim.__is_shim__ = True
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,6 +2,14 @@
 tests and benches must see the real single CPU device; multi-device tests
 spawn subprocesses with their own XLA_FLAGS."""
 
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_shim import install as _install_hypothesis_shim
+
+_install_hypothesis_shim()   # no-op when the real hypothesis is importable
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,269 @@
+"""Unified Dataset/Engine facade: backend registry, cross-backend result
+parity (ST + Basic workloads), plan-cache/re-binding behavior (a repeated
+templated query must neither re-parse nor re-compile), and Result views."""
+
+import numpy as np
+import pytest
+
+from repro.core import jexec
+from repro.engine import (
+    Dataset, Engine, ExecutionBackend, Result, available_backends,
+    create_backend, register_backend, template_signature,
+)
+from repro.engine.template import QueryTemplate, extract_constants
+from repro.rdf.workloads import ST_QUERIES, basic_queries
+
+
+@pytest.fixture(scope="module")
+def ds(watdiv_small):
+    cat, d, sch = watdiv_small
+    return Dataset(catalog=cat, dictionary=d, schema=sch)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    names = available_backends()
+    for name in ("eager", "jit", "distributed"):
+        assert name in names
+
+
+def test_unknown_backend_rejected(ds):
+    with pytest.raises(ValueError, match="unknown backend"):
+        ds.engine("no-such-engine").query("SELECT * WHERE { ?s ?p ?o }")
+
+
+def test_custom_backend_pluggable(ds):
+    """A registered backend is addressable by name with no call-site
+    changes — the facade's extension point."""
+    eager = create_backend("eager")
+
+    class Probe(ExecutionBackend):
+        name = "probe"
+        prepared = 0
+
+        def prepare(self, template, ctx):
+            Probe.prepared += 1
+            return eager.prepare(template, ctx)
+
+    register_backend("probe", Probe)
+    try:
+        eng = ds.engine("probe")
+        res = eng.query("SELECT * WHERE { ?u wsdbm:follows ?v }")
+        assert len(res) > 0
+        assert Probe.prepared == 1
+    finally:
+        from repro.engine import backends as _b
+        _b._REGISTRY.pop("probe", None)
+        ds._engines.pop(("probe", "extvp", id(None)), None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend parity (multiset equality under SPARQL bag semantics)
+# ---------------------------------------------------------------------------
+
+def test_parity_st_workload(ds):
+    eager = ds.engine("eager")
+    jit = ds.engine("jit")
+    for name, qtext in ST_QUERIES.items():
+        a = eager.query(qtext)
+        b = jit.query(qtext)
+        assert a.same_as(b), name
+
+
+def test_parity_basic_workload(ds):
+    eager = ds.engine("eager")
+    jit = ds.engine("jit")
+    for name, instances in basic_queries(ds.schema, seed=11,
+                                         n_instances=2).items():
+        for qtext in instances:
+            a = eager.query(qtext)
+            b = jit.query(qtext)
+            assert a.same_as(b), (name, qtext)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache + constant re-binding
+# ---------------------------------------------------------------------------
+
+def test_templated_query_not_recompiled(ds):
+    """Second instantiation of a template: plan-cache hit, and the XLA
+    trace count (== compile count) must not move."""
+    eng = Engine(ds, backend="jit", plan_cache_size=64)
+    q1 = "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v . ?v sorg:email ?e }"
+    q2 = "SELECT * WHERE { wsdbm:User2 wsdbm:follows ?v . ?v sorg:email ?e }"
+    assert template_signature(q1) == template_signature(q2)
+
+    r1 = eng.query(q1)
+    traces_after_first = jexec.trace_count()
+    r2 = eng.query(q2)
+    assert jexec.trace_count() == traces_after_first   # no recompilation
+    assert eng.metrics.plan_hits == 1
+    assert eng.metrics.plan_misses == 1
+    assert len(eng.cache) == 1
+
+    # and the re-bound results are the template instantiations' own answers
+    eager = ds.engine("eager")
+    assert r1.same_as(eager.query(q1))
+    assert r2.same_as(eager.query(q2))
+
+
+def test_rebinding_matches_fresh_compilation(ds):
+    """Re-bound prepared queries == from-scratch execution for many
+    instantiations of one template (eager backend: no re-planning)."""
+    eng = Engine(ds, backend="eager")
+    from repro.core.executor import execute
+    from repro.core.sparql import parse_sparql
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        uid = int(rng.integers(0, ds.schema.n_users))
+        q = (f"SELECT * WHERE {{ wsdbm:User{uid} wsdbm:follows ?v . "
+             f"?v wsdbm:likes ?p }}")
+        got = eng.query(q)
+        ref = execute(parse_sparql(q, ds.dictionary), ds.catalog)
+        assert got.same_as(Result(ref, ds.dictionary))
+    assert eng.metrics.plan_misses == 1
+    assert eng.metrics.plan_hits == 5
+
+
+def test_plan_cache_is_lru_bounded(ds):
+    eng = Engine(ds, backend="eager", plan_cache_size=2)
+    queries = [
+        "SELECT * WHERE { ?u wsdbm:follows ?v }",
+        "SELECT * WHERE { ?u wsdbm:likes ?p }",
+        "SELECT * WHERE { ?u sorg:email ?e }",
+    ]
+    for q in queries:
+        eng.query(q)
+    assert len(eng.cache) == 2            # bounded, oldest evicted
+    assert eng.cache.evictions == 1
+    assert template_signature(queries[0]) not in eng.cache
+    assert template_signature(queries[2]) in eng.cache
+
+
+def test_missing_constant_short_circuits(ds):
+    """An instantiation whose constant is absent from the dictionary is
+    the statistics-only empty answer — served from the cached template."""
+    eng = Engine(ds, backend="jit")
+    q1 = "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v . ?v sorg:email ?e }"
+    q2 = "SELECT * WHERE { wsdbm:User999999 wsdbm:follows ?v . ?v sorg:email ?e }"
+    assert len(eng.query(q1)) > 0
+    traces = jexec.trace_count()
+    res = eng.query(q2)
+    assert len(res) == 0
+    assert jexec.trace_count() == traces
+    assert eng.metrics.empties == 1
+
+
+def test_template_constant_extraction():
+    q = ("SELECT * WHERE { ?v0 wsdbm:likes wsdbm:Product3 . "
+         "?v0 sorg:email \"x@y\" . ?v0 foaf:age ?a . FILTER(?a > 40) }")
+    assert extract_constants(q) == ["wsdbm:Product3", '"x@y"']
+    sig = template_signature(q)
+    assert "Product3" not in sig and "40" in sig   # schema + literals differ
+
+
+def test_entity_with_trailing_letters_after_digit():
+    """The slot regex must consume whole tokens: wsdbm:User3a once split
+    into '<¤0>a' mid-token and broke parsing for valid queries."""
+    ds = Dataset.from_triples([
+        ("wsdbm:User3a", "wsdbm:follows", "wsdbm:User4"),
+        ("wsdbm:User4", "wsdbm:follows", "wsdbm:User3a"),
+    ])
+    eng = ds.engine("eager")
+    r = eng.query("SELECT * WHERE { wsdbm:User3a wsdbm:follows ?y }")
+    assert r.to_terms() == [{"?y": "wsdbm:User4"}]
+    # and the template re-binds across such names
+    r2 = eng.query("SELECT * WHERE { wsdbm:User4 wsdbm:follows ?y }")
+    assert r2.to_terms() == [{"?y": "wsdbm:User3a"}]
+    assert eng.metrics.plan_hits == 1
+
+
+def test_non_rebindable_exact_repeat_cached(ds):
+    """IRI-form predicates make a template non-rebindable (the constant
+    sits in predicate position); identical repeats must still reuse the
+    prepared program instead of re-parsing and re-compiling."""
+    eng = Engine(ds, backend="jit")
+    q = "SELECT * WHERE { ?x <wsdbm:follows> ?y . ?y <sorg:email> ?e }"
+    r1 = eng.query(q)
+    traces = jexec.trace_count()
+    r2 = eng.query(q)
+    assert jexec.trace_count() == traces
+    assert eng.metrics.plan_hits == 1 and len(eng.cache) == 1
+    assert r1.same_as(r2) and len(r1) > 0
+
+
+def test_short_circuit_metric(ds):
+    eng = Engine(ds, backend="eager")
+    eng.query("SELECT * WHERE { ?p sorg:price ?x . ?x wsdbm:follows ?y }")
+    eng.query("SELECT * WHERE { wsdbm:User999999 wsdbm:follows ?v }")
+    eng.query("SELECT * WHERE { ?u wsdbm:follows ?v }")
+    assert eng.metrics.short_circuits == 2
+    assert eng.metrics.empties == 2
+
+
+def test_template_binding(ds):
+    q1 = "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v }"
+    t = QueryTemplate(q1, ds.dictionary)
+    assert t.rebindable and t.n_slots == 1
+    b = t.binding_for("SELECT * WHERE { wsdbm:User7 wsdbm:follows ?v }")
+    assert not b.missing
+    assert list(b.mapping.values()) == [ds.dictionary.id_of("wsdbm:User7")]
+
+
+# ---------------------------------------------------------------------------
+# Result type
+# ---------------------------------------------------------------------------
+
+def test_result_views():
+    ds = Dataset.from_triples([
+        ("A", "follows", "B"), ("B", "follows", "C"), ("A", "likes", "I1"),
+    ])
+    res = ds.query("SELECT * WHERE { ?x follows ?y }")
+    assert isinstance(res, Result)
+    assert set(res.cols) == {"?x", "?y"}
+    arr = res.to_numpy()
+    assert arr.shape == (2, 2) and arr.dtype == np.int32
+    terms = res.to_terms()
+    assert {frozenset(t.items()) for t in terms} == {
+        frozenset({("?x", "A"), ("?y", "B")}),
+        frozenset({("?x", "B"), ("?y", "C")}),
+    }
+
+
+def test_result_multiset_ignores_column_order():
+    from repro.core.executor import Bindings
+    a = Result(Bindings(("?x", "?y"), np.array([[1, 2], [3, 4]], np.int32)))
+    b = Result(Bindings(("?y", "?x"), np.array([[4, 3], [2, 1]], np.int32)))
+    assert a.same_as(b)
+    c = Result(Bindings(("?x", "?y"), np.array([[1, 2]], np.int32)))
+    assert not a.same_as(c)
+
+
+def test_dataset_from_ntriples(tmp_path):
+    from repro.rdf.ntriples import write_ntriples
+    path = str(tmp_path / "g.nt")
+    write_ntriples([("A", "follows", "B"), ("B", "follows", "C")], path)
+    ds = Dataset.from_ntriples(path)
+    assert ds.n_triples == 2
+    assert len(ds.query("SELECT * WHERE { ?x follows ?y }")) == 2
+
+
+# ---------------------------------------------------------------------------
+# Serving layer rides the same facade
+# ---------------------------------------------------------------------------
+
+def test_server_delegates_to_engine(ds):
+    from repro.serve import SparqlServer
+    server = SparqlServer(ds.catalog, backend="jit")
+    q1 = "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v . ?v sorg:email ?e }"
+    q2 = "SELECT * WHERE { wsdbm:User2 wsdbm:follows ?v . ?v sorg:email ?e }"
+    server.query(q1)
+    traces = jexec.trace_count()
+    server.query(q2)
+    assert jexec.trace_count() == traces
+    m = server.metrics.summary()
+    assert m["served"] == 2 and m["plan_hit_rate"] == 0.5
+    assert isinstance(server.engine, Engine)

@@ -86,8 +86,9 @@ class TestCostCorrection:
                 x, _ = body(x, w[i])
             return x.sum()
 
-        fs = jax.jit(f_scan).lower(x, w).compile().cost_analysis()["flops"]
-        fu = jax.jit(f_unroll).lower(x, w).compile().cost_analysis()["flops"]
+        from repro.launch.dryrun import cost_analysis_dict
+        fs = cost_analysis_dict(jax.jit(f_scan).lower(x, w).compile())["flops"]
+        fu = cost_analysis_dict(jax.jit(f_unroll).lower(x, w).compile())["flops"]
         assert fu > 4 * fs  # unrolled counts every layer; scan ~one body
 
 
