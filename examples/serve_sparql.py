@@ -61,6 +61,10 @@ def main() -> None:
           f"p99={m['p99_ms']:.1f}")
     print(f"  plan-cache hit rate: {m['plan_hit_rate']:.2f} "
           f"({engine.cache.evictions} evictions)")
+    print(f"  micro-batches: {int(m['batches'])} launches for "
+          f"{int(m['batched_requests'])} requests "
+          f"(occupancy {m['batch_occupancy']:.2f}, "
+          f"padding waste {m['padding_waste']:.2f})")
     print(f"  result rows: {int(m['rows'])}, empty answers: "
           f"{int(m['empties'])} (statistics-only: {int(m['short_circuits'])})")
 

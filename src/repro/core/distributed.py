@@ -216,9 +216,15 @@ class DistributedExecutor:
 
     # -- traced per-shard program ---------------------------------------------
     def _shard_program(self, caps, bounds, *flat_tables):
+        """Returns (data, n, total, per_step_overflow[n_steps]).  Like
+        :meth:`repro.core.jexec.PlanExecutor._compose`, overflow is
+        reported per step so the host retry doubles only the overflowing
+        capacities — one heavy constant must not inflate every buffer for
+        the whole (batched) workload."""
         plan = self.plan
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         acc: Optional[DistBindings] = None
+        ovfs = []
         ti = 0
         for i, step in enumerate(plan.steps):
             # local shard: (1, cap, 2) and (1,) — drop the sharded leading axis
@@ -239,24 +245,30 @@ class DistributedExecutor:
             cur = DistBindings(cols, data, n, ovf, part_var)
             if acc is None:
                 acc = cur
+                ovfs.append(cur.overflow)
                 continue
             acc = self._dist_join(acc, cur, caps[i], axis)
-        out_ovf = jax.lax.pmax(acc.overflow, axis)
+            ovfs.append(acc.overflow | cur.overflow)
+        out_ovf = jax.lax.pmax(jnp.stack(ovfs), axis)
         total = jax.lax.psum(acc.n, axis)
         return acc.data, acc.n[None], total, out_ovf
 
     def _dist_join(self, a: DistBindings, b: DistBindings, out_cap: int,
                    axis) -> DistBindings:
+        """Join two shard-local relations; the returned ``overflow`` is
+        this step's OWN flag (repartition bucket/compact + join output) —
+        input flags are not propagated, the caller tracks them per step."""
+        no = jnp.asarray(False)
         shared = [c for c in a.cols if c in b.cols]
         if not shared:
             # cross join: gather the (small) b side everywhere, then local
             b_all, bn_all = _allgather_relation(b, axis)
-            jb = device_join(JBindings(a.cols, a.data, a.n, a.overflow),
-                             JBindings(b.cols, b_all, bn_all, b.overflow),
+            jb = device_join(JBindings(a.cols, a.data, a.n, no),
+                             JBindings(b.cols, b_all, bn_all, no),
                              out_cap)
             return DistBindings(jb.cols, jb.data, jb.n, jb.overflow, a.part_key)
         key = shared[0]
-        ovf = a.overflow | b.overflow
+        ovf = no
         da, na = a.data, a.n
         db, nb = b.data, b.n
         # repartition any side not already partitioned by the join key
@@ -268,8 +280,8 @@ class DistributedExecutor:
             db, nb, o2 = repartition(db, nb, b.cols.index(key), self.n_shards,
                                      axis, max(db.shape[0], out_cap))
             ovf |= o2
-        jb = device_join(JBindings(a.cols, da, na, ovf),
-                         JBindings(b.cols, db, nb, jnp.asarray(False)),
+        jb = device_join(JBindings(a.cols, da, na, no),
+                         JBindings(b.cols, db, nb, no),
                          out_cap)
         return DistBindings(jb.cols, jb.data, jb.n, jb.overflow | ovf, key)
 
@@ -291,6 +303,34 @@ class DistributedExecutor:
                 out_specs=(P(self.axes), P(self.axes), P(), P()),
             )
             return fn(bounds, *flat)
+
+        return jax.jit(wrapper, static_argnums=(0,))
+
+    @functools.cached_property
+    def _jitted_batch(self):
+        # Batched form: the (B, n_steps, 2) bounds stack is replicated to
+        # every shard and vmapped *inside* shard_map, so the batch axis
+        # rides alongside the data axis — every device executes all B
+        # constant-bindings over its own table shard in one launch, and
+        # results stay sharded per (request, shard).
+        specs = [P()]                       # bounds (B, n_steps, 2) replicated
+        for _ in self.table_shards:
+            specs.append(P(self.axes))      # rows (S, cap, 2) split on axes
+            specs.append(P(self.axes))      # ns   (S,)
+
+        def wrapper(caps, bounds_b, *flat):
+            def shard_fn(bounds_b, *flat):
+                return jax.vmap(
+                    lambda b: self._shard_program(caps, b, *flat)
+                )(bounds_b)
+
+            fn = _shard_map(
+                shard_fn,
+                mesh=self.mesh,
+                in_specs=tuple(specs),
+                out_specs=(P(None, self.axes), P(None, self.axes), P(), P()),
+            )
+            return fn(bounds_b, *flat)
 
         return jax.jit(wrapper, static_argnums=(0,))
 
@@ -317,7 +357,9 @@ class DistributedExecutor:
         caps = tuple(self.caps)
         for _ in range(max_retries):
             data, ns, total, ovf = self._jitted(caps, bj, *flat)
-            if not bool(ovf):
+            ovf = np.asarray(ovf)
+            if not ovf.any():
+                self.caps = list(caps)   # keep grown caps across requests
                 rows = []
                 data = np.asarray(data)
                 ns = np.asarray(ns)
@@ -326,8 +368,44 @@ class DistributedExecutor:
                     rows.append(per[i][: int(ns[i])])
                 out = np.concatenate(rows, axis=0) if rows else np.empty((0, 0))
                 return out, self._final_cols()
-            caps = tuple(c * 2 for c in caps)
+            caps = tuple(c * 2 if ovf[i] else c for i, c in enumerate(caps))
         raise RuntimeError("distributed join capacity overflow after retries")
+
+    def run_batch(self, bounds_batch: Sequence[np.ndarray],
+                  max_retries: int = 6) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+        """Execute B constant-bindings of the plan in one sharded launch;
+        see :meth:`repro.core.jexec.PlanExecutor.run_batch` for the retry
+        contract (any element overflowing retries the whole batch)."""
+        if not bounds_batch:
+            return []
+        flat = self._flat_inputs()
+        shape = self._default_bounds.shape
+        bb = np.stack([np.asarray(b, dtype=np.int32).reshape(shape)
+                       for b in bounds_batch])
+        bj = jnp.asarray(bb)
+        caps = tuple(self.caps)
+        for _ in range(max_retries):
+            data, ns, total, ovf = self._jitted_batch(caps, bj, *flat)
+            ovf = np.asarray(ovf)                # (B, n_steps)
+            if not ovf.any():
+                self.caps = list(caps)
+                data = np.asarray(data)          # (B, S*cap, k)
+                ns = np.asarray(ns)              # (B, S)
+                cols = self._final_cols()
+                out = []
+                for bi in range(data.shape[0]):
+                    per = data[bi].reshape(self.n_shards, -1, data.shape[-1])
+                    rows = [per[i][: int(ns[bi, i])]
+                            for i in range(self.n_shards)]
+                    merged = np.concatenate(rows, axis=0) if rows \
+                        else np.empty((0, 0))
+                    out.append((merged, cols))
+                return out
+            step_ovf = ovf.any(axis=0)
+            caps = tuple(c * 2 if step_ovf[i] else c
+                         for i, c in enumerate(caps))
+        raise RuntimeError(
+            "distributed join capacity overflow after retries (batched)")
 
     def _final_cols(self) -> Tuple[str, ...]:
         cols: List[str] = []

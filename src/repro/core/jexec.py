@@ -40,7 +40,8 @@ from repro.rdf.dictionary import PAD, UNBOUND
 from repro.core.algebra import is_var
 
 __all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan",
-           "bounds_from_plan", "trace_count"]
+           "device_scan_windowed", "build_key", "bounds_from_plan",
+           "trace_count"]
 
 A_SENT = np.int32(2**31 - 1)   # probe-side padded-row key (== PAD)
 B_SENT = np.int32(2**31 - 2)   # build-side padded-row key (sort-max, != A_SENT)
@@ -104,8 +105,52 @@ def device_scan(rows: jax.Array, n: jax.Array, s_bound,
     return _compact(projected, keep, out_cap)
 
 
-def device_join(a: JBindings, b: JBindings, out_cap: int) -> JBindings:
-    """Natural join of two static relations (sort-merge, rank expansion)."""
+def build_key(b: JBindings, key_col: int) -> jax.Array:
+    """The build-side join-key column with NULL/pad sentinels applied —
+    the input of the build-side sort.  Exposed so a batched program can
+    presort a *shared* (bounds-independent) build relation once and reuse
+    it for every batch element (see ``device_join``'s ``b_presorted``)."""
+    kb = b.data[:, key_col]
+    kb = jnp.where(kb == UNBOUND, B_NULL, kb)
+    return jnp.where(_valid_mask(b.capacity, b.n), kb, B_SENT)
+
+
+def device_scan_windowed(rows: jax.Array, n: jax.Array, s_bound,
+                         out_cols: Sequence[int],
+                         out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bound-subject scan over a subject-sorted table: the matching rows
+    are one contiguous window found by binary search and need no compact
+    sort, so the cost is O(log T + out_cap) instead of the full-table
+    mask-and-compact of :func:`device_scan` — the difference between a
+    per-request scan and a per-batch-element scan being effectively free.
+    PAD rows sort after every valid id, so the search never needs the
+    valid count.  Only usable without an object post-filter: overflow is
+    the raw window width vs ``out_cap``, which for a filtered scan would
+    be conservative (a hub subject with a selective object filter would
+    permanently inflate the step's capacity — callers route that case to
+    :func:`device_scan`, which counts true matches)."""
+    cap = rows.shape[0]
+    col = rows[:, 0]
+    sb = jnp.asarray(s_bound, dtype=jnp.int32)
+    lo = jnp.searchsorted(col, sb, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(col, sb, side="right").astype(jnp.int32)
+    idx = lo + jnp.arange(out_cap, dtype=jnp.int32)
+    keep = idx < hi
+    g = rows[jnp.clip(idx, 0, cap - 1)]
+    projected = g[:, list(out_cols)] if out_cols else g[:, :0]
+    data = jnp.where(keep[:, None], projected, PAD)
+    return data, jnp.minimum(hi - lo, out_cap), hi - lo > out_cap
+
+
+def device_join(a: JBindings, b: JBindings, out_cap: int,
+                b_presorted: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> JBindings:
+    """Natural join of two static relations (sort-merge, rank expansion).
+
+    ``b_presorted`` is an optional ``(order_b, kb_sorted)`` pair from
+    :func:`build_key` + sort, letting callers hoist the O(n log n)
+    build-side sort out of a vmapped batch when ``b`` does not depend on
+    the bound constants."""
     shared = [c for c in a.cols if c in b.cols]
     b_only = [c for c in b.cols if c not in a.cols]
     out_cols = a.cols + tuple(b_only)
@@ -125,14 +170,14 @@ def device_join(a: JBindings, b: JBindings, out_cap: int) -> JBindings:
                          a.overflow | b.overflow | (total > out_cap))
 
     ka = a.data[:, a.cols.index(shared[0])]
-    kb = b.data[:, b.cols.index(shared[0])]
     ka = jnp.where(ka == UNBOUND, A_NULL, ka)
-    kb = jnp.where(kb == UNBOUND, B_NULL, kb)
     ka = jnp.where(_valid_mask(cap_a, a.n), ka, A_SENT)
-    kb = jnp.where(_valid_mask(cap_b, b.n), kb, B_SENT)
-
-    order_b = jnp.argsort(kb).astype(jnp.int32)
-    kb_sorted = kb[order_b]
+    if b_presorted is None:
+        kb = build_key(b, b.cols.index(shared[0]))
+        order_b = jnp.argsort(kb).astype(jnp.int32)
+        kb_sorted = kb[order_b]
+    else:
+        order_b, kb_sorted = b_presorted
     lo = jnp.searchsorted(kb_sorted, ka, side="left").astype(jnp.int32)
     hi = jnp.searchsorted(kb_sorted, ka, side="right").astype(jnp.int32)
     cnt = hi - lo
@@ -161,7 +206,15 @@ def device_join(a: JBindings, b: JBindings, out_cap: int) -> JBindings:
     if b_only:
         pieces.append(right[:, [b.cols.index(c) for c in b_only]])
     data = jnp.concatenate(pieces, axis=1)
-    data, n, ovf = _compact(data, valid, out_cap)
+    if shared[1:]:
+        data, n, ovf = _compact(data, valid, out_cap)
+    else:
+        # single shared variable (the overwhelmingly common star/chain
+        # case): rank expansion emits matches contiguously at j < total,
+        # so masking replaces the O(out_cap log out_cap) compact sort
+        data = jnp.where(valid[:, None], data, PAD)
+        n = jnp.minimum(total, out_cap).astype(jnp.int32)
+        ovf = jnp.asarray(False)
     return JBindings(out_cols, data, n,
                      a.overflow | b.overflow | ovf | (total > out_cap))
 
@@ -246,31 +299,133 @@ class PlanExecutor:
         self._default_bounds = bounds_from_plan(plan)
 
     # -- the traced program --------------------------------------------------
+    def _scan_step(self, i: int, meta, table_rows: List[jax.Array],
+                   table_ns: List[jax.Array], bounds: jax.Array,
+                   caps: Tuple[int, ...]) -> JBindings:
+        """One scan, picking the windowed form when the subject is bound
+        (tables are subject-sorted, see :class:`repro.core.table.Table`)."""
+        s_bound, o_bound, same, take, cols = meta
+        out_cap = caps[i] if i == 0 else table_rows[i].shape[0]
+        sb = bounds[i, 0] if s_bound is not None else None
+        ob = bounds[i, 1] if o_bound is not None else None
+        if s_bound is not None and o_bound is None:
+            data, n, ovf = device_scan_windowed(table_rows[i], table_ns[i],
+                                                sb, take, out_cap)
+        else:
+            data, n, ovf = device_scan(table_rows[i], table_ns[i], sb, ob,
+                                       same, take, out_cap)
+        return JBindings(cols, data, n, ovf)
+
+    def _compose(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
+                 table_ns: List[jax.Array], bounds: jax.Array,
+                 shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]]
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """The scan/join pipeline both programs run.  Returns
+        (data, n, per_step_overflow[n_steps]): overflow is reported PER
+        STEP so the host retry doubles only the capacities that actually
+        overflowed — wholesale doubling let one heavy constant inflate
+        every buffer of the program, which is poison for batched serving
+        (all batch elements pay the worst element's caps).  ``shared``
+        maps step index -> precomputed (relation, presorted join key) for
+        bounds-independent scans (empty for the single-request program)."""
+        acc: Optional[JBindings] = None
+        ovfs: List[jax.Array] = []
+        no = jnp.asarray(False)
+        for i, step in enumerate(self.plan.steps):
+            if i in shared:
+                cur, pre = shared[i]
+            else:
+                cur = self._scan_step(i, _step_meta(step), table_rows,
+                                      table_ns, bounds, caps)
+                pre = None
+            if acc is None:
+                acc = cur
+                ovfs.append(cur.overflow)
+            else:
+                # strip sticky input flags: we want this join's OWN overflow
+                joined = device_join(
+                    JBindings(acc.cols, acc.data, acc.n, no),
+                    JBindings(cur.cols, cur.data, cur.n, no), caps[i],
+                    b_presorted=pre)
+                ovfs.append(joined.overflow | cur.overflow)
+                acc = joined
+        assert acc is not None
+        return acc.data, acc.n, jnp.stack(ovfs)
+
     def _program(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
                  table_ns: List[jax.Array],
                  bounds: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
         global _TRACE_COUNT
         _TRACE_COUNT += 1
-        plan = self.plan
-        acc: Optional[JBindings] = None
-        for i, step in enumerate(plan.steps):
-            s_bound, o_bound, same, take, cols = _step_meta(step)
-            data, n, ovf = device_scan(table_rows[i], table_ns[i],
-                                       bounds[i, 0] if s_bound is not None else None,
-                                       bounds[i, 1] if o_bound is not None else None,
-                                       same, take,
-                                       caps[i] if i == 0 else table_rows[i].shape[0])
-            cur = JBindings(cols, data, n, ovf)
-            if acc is None:
-                acc = cur
-            else:
-                acc = device_join(acc, cur, caps[i])
-        assert acc is not None
-        return acc.data, acc.n, acc.overflow
+        return self._compose(caps, table_rows, table_ns, bounds, {})
+
+    @functools.cached_property
+    def _device_inputs(self) -> Tuple[List[jax.Array], List[jax.Array]]:
+        """Device-resident padded tables, uploaded ONCE per executor —
+        the hot path must not re-pad and re-transfer O(table) bytes on
+        every launch."""
+        rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
+        ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
+        return rows, ns
 
     @functools.cached_property
     def _jitted(self):
         return jax.jit(self._program, static_argnums=(0,))
+
+    # -- the batched traced program --------------------------------------------
+    def _program_batched(self, caps: Tuple[int, ...],
+                         table_rows: List[jax.Array],
+                         table_ns: List[jax.Array],
+                         bounds_b: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """B constant-bindings of the template in one program.
+
+        Constants only enter scan *selection values*, so any step whose
+        triple pattern binds no constant produces the same relation for
+        every batch element.  Those scans — and the build-side sort of
+        the joins that consume them — are hoisted OUT of the vmap and
+        computed once per launch; only the constant-dependent scans and
+        the (capacity-bounded, small) probe/expand phases replicate per
+        element.  This is what makes a batch ~O(shared + B·small) instead
+        of B times the full per-request program.
+        """
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1
+        plan = self.plan
+        metas = [_step_meta(s) for s in plan.steps]
+
+        # shared phase: bounds-independent scans + their join-key presort
+        shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]] = {}
+        acc_cols: List[str] = []
+        for i, step in enumerate(plan.steps):
+            s_bound, o_bound, same, take, cols = metas[i]
+            if i > 0 and s_bound is None and o_bound is None:
+                data, n, ovf = device_scan(table_rows[i], table_ns[i], None,
+                                           None, same, take,
+                                           table_rows[i].shape[0])
+                cur = JBindings(cols, data, n, ovf)
+                # the join key device_join will pick: first accumulated
+                # column present on the build side
+                key = next((c for c in acc_cols if c in cols), None)
+                pre = None
+                if key is not None:
+                    kb = build_key(cur, cols.index(key))
+                    order_b = jnp.argsort(kb).astype(jnp.int32)
+                    pre = (order_b, kb[order_b])
+                shared[i] = (cur, pre)
+            for c in cols:
+                if c not in acc_cols:
+                    acc_cols.append(c)
+
+        return jax.vmap(
+            lambda b: self._compose(caps, table_rows, table_ns, b, shared)
+        )(bounds_b)
+
+    @functools.cached_property
+    def _jitted_batch(self):
+        # jax.jit caches per static (caps, B) pair, so trace_count() moves
+        # once per (template, bucket-shape) — never once per request.
+        return jax.jit(self._program_batched, static_argnums=(0,))
 
     def lower(self, caps: Optional[Tuple[int, ...]] = None):
         caps = caps or tuple(self.caps)
@@ -282,20 +437,54 @@ class PlanExecutor:
 
     def run(self, max_retries: int = 8,
             bounds: Optional[np.ndarray] = None) -> Tuple[np.ndarray, Tuple[str, ...]]:
-        rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
-        ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
+        rows, ns = self._device_inputs
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
         bj = jnp.asarray(b)
         caps = tuple(self.caps)
         for _ in range(max_retries):
             data, n, ovf = self._jitted(caps, rows, ns, bj)
-            if not bool(ovf):
+            ovf = np.asarray(ovf)
+            if not ovf.any():
+                # keep grown caps: a hot template must not pay the
+                # overflow->retry double-launch on every request
+                self.caps = list(caps)
                 n = int(n)
                 cols = self._final_cols()
                 return np.asarray(data)[:n], cols
-            caps = tuple(c * 2 for c in caps)
+            caps = tuple(c * 2 if ovf[i] else c for i, c in enumerate(caps))
         raise RuntimeError("join capacity overflow after retries")
+
+    def run_batch(self, bounds_batch: Sequence[np.ndarray],
+                  max_retries: int = 8) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+        """Execute B constant-bindings of this template's program in ONE
+        XLA launch: the (B, n_steps, 2) bounds stack is the only batched
+        input (tables broadcast), so device work is amortized across the
+        whole micro-batch.  Overflow on *any* batch element retries the
+        whole batch with doubled caps — the batch shares one cap vector,
+        which keeps the program count at one per (caps, B)."""
+        if not bounds_batch:
+            return []
+        rows, ns = self._device_inputs
+        shape = self._default_bounds.shape
+        bb = np.stack([np.asarray(b, dtype=np.int32).reshape(shape)
+                       for b in bounds_batch])
+        bj = jnp.asarray(bb)
+        caps = tuple(self.caps)
+        for _ in range(max_retries):
+            data, n, ovf = self._jitted_batch(caps, rows, ns, bj)
+            ovf = np.asarray(ovf)                # (B, n_steps)
+            if not ovf.any():
+                self.caps = list(caps)
+                cols = self._final_cols()
+                data = np.asarray(data)
+                n = np.asarray(n)
+                return [(data[i, : int(n[i])], cols)
+                        for i in range(data.shape[0])]
+            step_ovf = ovf.any(axis=0)
+            caps = tuple(c * 2 if step_ovf[i] else c
+                         for i, c in enumerate(caps))
+        raise RuntimeError("join capacity overflow after retries (batched)")
 
     def _final_cols(self) -> Tuple[str, ...]:
         cols: List[str] = []

@@ -2,15 +2,26 @@
 
     from repro.engine import Dataset
 
-    ds = Dataset.watdiv(scale=0.5, threshold=0.25)
+    # τ=0.25 is the paper's recommended production SF-threshold (§7.4):
+    # it keeps most query-relevant ExtVP reductions at a fraction of
+    # the τ=1.0 storage.
+    ds = Dataset.watdiv(scale=0.5, seed=0, threshold=0.25)
     eng = ds.engine("jit")                  # or "eager" / "distributed"
     res = eng.query("SELECT * WHERE { ?u wsdbm:follows ?v . "
                     "?v wsdbm:likes ?p }")
     res.to_terms()                          # dictionary-decoded rows
 
+    # batched: same-template requests share ONE compiled-program launch
+    results = eng.query_batch([
+        "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v . ?v sorg:email ?e }",
+        "SELECT * WHERE { wsdbm:User2 wsdbm:follows ?v . ?v sorg:email ?e }",
+    ])
+
 Templated queries (same shape, different constants) hit the plan cache:
 parsing and compilation happen once per template, constants re-bind as
-runtime values (see :mod:`repro.engine.template`).
+runtime values (see :mod:`repro.engine.template`).  ``query_batch``
+stacks the constants into a leading batch axis instead (one XLA launch
+for the whole batch, see docs/serving.md).
 """
 
 from repro.engine.backends import (

@@ -67,6 +67,10 @@ class PreparedQuery:
     """
 
     backend: str = "?"
+    #: True when run_batch executes the whole batch in one program launch
+    #: (padding to a static shape is then worthwhile); the base loop runs
+    #: padding slots as real queries, so callers must not pad for it.
+    vectorized_batch: bool = False
 
     def __init__(self, template: QueryTemplate, ctx: ExecutionContext):
         self.template = template
@@ -76,6 +80,16 @@ class PreparedQuery:
     # -- interface -------------------------------------------------------------
     def run(self, binding: Optional[ConstantBinding] = None) -> Result:
         raise NotImplementedError
+
+    def run_batch(self, bindings: List[Optional[ConstantBinding]]
+                  ) -> List[Result]:
+        """Evaluate B constant-bindings of this template; one Result per
+        binding, in order.  The base implementation is the sequential
+        loop — the parity oracle every vectorized override is tested
+        against.  Device backends override it to execute the whole batch
+        in a single program launch (the bindings stack into a leading
+        batch axis of the ``bounds`` input)."""
+        return [self.run(b) for b in bindings]
 
     # -- shared helpers --------------------------------------------------------
     @property
@@ -133,50 +147,72 @@ class _EagerPrepared(PreparedQuery):
                       self.ctx.dictionary)
 
 
-class _JitPrepared(PreparedQuery):
+class _VectorizedPrepared(PreparedQuery):
+    """Shared device path (jit/distributed): the executor owns a compiled
+    static program whose ``bounds`` input carries the bound constants.
+    ``run`` feeds one bounds vector; ``run_batch`` stacks B of them into
+    a leading batch axis and executes the whole micro-batch in a single
+    launch.  Missing-constant bindings (S2RDF's statistics-only empty
+    answer) are answered on the host and never occupy a batch slot."""
+
+    vectorized_batch = True
+
+    def __init__(self, template, ctx, executor):
+        super().__init__(template, ctx)
+        self.executor = executor
+        self.plan: Plan = executor.plan
+
+    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+        binding = binding or _NO_BINDING
+        if binding.missing:
+            return self._empty()
+        plan = rebind_plan(self.plan, binding.mapping)
+        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
+        return self._finalize(Bindings(cols, data))
+
+    def run_batch(self, bindings: List[Optional[ConstantBinding]]
+                  ) -> List[Result]:
+        bindings = [b or _NO_BINDING for b in bindings]
+        results: List[Optional[Result]] = [None] * len(bindings)
+        live: List[int] = []
+        bounds: List[np.ndarray] = []
+        for i, b in enumerate(bindings):
+            if b.missing:
+                results[i] = self._empty()
+            else:
+                live.append(i)
+                bounds.append(self.executor.bounds_from_plan(
+                    rebind_plan(self.plan, b.mapping)))
+        if live:
+            # pad back to the caller's (static-bucket) batch size: missing
+            # bindings must not shrink B, or each distinct live-count would
+            # compile its own program
+            while len(bounds) < len(bindings):
+                bounds.append(bounds[-1])
+            outs = self.executor.run_batch(bounds)
+            for i, (data, cols) in zip(live, outs):
+                results[i] = self._finalize(Bindings(cols, data))
+        return results
+
+    def lower(self, caps=None):
+        return self.executor.lower(caps)
+
+
+class _JitPrepared(_VectorizedPrepared):
     """Static-shape XLA program, compiled once per template.  Bound
-    constants are runtime scalars, so re-binding never re-traces."""
+    constants are runtime scalars, so re-binding never re-traces; a
+    batch of bindings re-traces once per batch shape, never per request."""
 
     backend = "jit"
 
-    def __init__(self, template, ctx, executor):
-        super().__init__(template, ctx)
-        self.executor = executor
-        self.plan: Plan = executor.plan
 
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
-        binding = binding or _NO_BINDING
-        if binding.missing:
-            return self._empty()
-        plan = rebind_plan(self.plan, binding.mapping)
-        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
-        return self._finalize(Bindings(cols, data))
-
-    def lower(self, caps=None):
-        return self.executor.lower(caps)
-
-
-class _DistributedPrepared(PreparedQuery):
+class _DistributedPrepared(_VectorizedPrepared):
     """shard_map engine over a mesh; table shards and the per-shard
-    program are template-level state, constants are runtime scalars."""
+    program are template-level state, constants are runtime scalars.
+    Batches vmap the bounds stack inside shard_map, so every device
+    serves the whole batch over its own table shard in one launch."""
 
     backend = "distributed"
-
-    def __init__(self, template, ctx, executor):
-        super().__init__(template, ctx)
-        self.executor = executor
-        self.plan: Plan = executor.plan
-
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
-        binding = binding or _NO_BINDING
-        if binding.missing:
-            return self._empty()
-        plan = rebind_plan(self.plan, binding.mapping)
-        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
-        return self._finalize(Bindings(cols, data))
-
-    def lower(self, caps=None):
-        return self.executor.lower(caps)
 
 
 # ---------------------------------------------------------------------------

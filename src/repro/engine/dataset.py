@@ -6,10 +6,18 @@ VP tables, semi-join-reduce them into ExtVP with selectivity statistics
 that pipeline end to end and hands out :class:`~repro.engine.engine.Engine`
 instances bound to any registered execution backend.
 
+    # threshold is the paper's SF-threshold τ; 0.25 is the recommended
+    # production trade-off (§7.4), 1.0 materializes every reduction.
     ds = Dataset.watdiv(scale=1.0, seed=0, threshold=0.25)
     eng = ds.engine("jit")
     res = eng.query("SELECT * WHERE { ?u wsdbm:follows ?v }")
     res.to_terms()
+
+    # micro-batched: B same-template requests, one program launch
+    batch = eng.query_batch([
+        "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v }",
+        "SELECT * WHERE { wsdbm:User2 wsdbm:follows ?v }",
+    ])
 """
 
 from __future__ import annotations
@@ -80,14 +88,17 @@ class Dataset:
 
     # -- engines --------------------------------------------------------------
     def engine(self, backend: str = "eager", layout: str = "extvp",
-               mesh=None, plan_cache_size: int = 512) -> Engine:
+               mesh=None, plan_cache_size: int = 512,
+               batch_shapes=None) -> Engine:
         """An :class:`Engine` over this dataset.  Engines are cached per
-        (backend, layout, mesh) so repeated calls share plan caches."""
-        key = (backend, layout, id(mesh))
+        configuration so repeated calls share plan caches."""
+        key = (backend, layout, id(mesh), plan_cache_size,
+               None if batch_shapes is None else tuple(batch_shapes))
         eng = self._engines.get(key)
         if eng is None:
             eng = Engine(self, backend=backend, layout=layout, mesh=mesh,
-                         plan_cache_size=plan_cache_size)
+                         plan_cache_size=plan_cache_size,
+                         batch_shapes=batch_shapes)
             self._engines[key] = eng
         return eng
 

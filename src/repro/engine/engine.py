@@ -21,7 +21,7 @@ from __future__ import annotations
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,6 +34,12 @@ from repro.engine.template import QueryTemplate, _normalize, template_signature
 __all__ = ["Engine", "ServerMetrics", "PlanCache"]
 
 
+# Latency/queue sample lists keep only the newest window: a long-lived
+# server must not grow per-request state without bound, and recent
+# samples are what an operator's percentiles should reflect anyway.
+_MAX_SAMPLES = 8192
+
+
 @dataclass
 class ServerMetrics:
     served: int = 0
@@ -43,9 +49,26 @@ class ServerMetrics:
     plan_hits: int = 0
     plan_misses: int = 0
     latencies_ms: List[float] = field(default_factory=list)
+    # micro-batching: one "batch" is one device launch serving B requests
+    batches: int = 0          # batched launches executed
+    batched_requests: int = 0 # requests served through a batched launch
+    padding_slots: int = 0    # slots wasted padding up to a static shape
+    queue_ms: List[float] = field(default_factory=list)  # submit -> result
+
+    def record_latency(self, ms: float, count: int = 1) -> None:
+        self.latencies_ms.extend([ms] * count)
+        if len(self.latencies_ms) > _MAX_SAMPLES:
+            del self.latencies_ms[: -_MAX_SAMPLES]
+
+    def record_queue(self, ms: float) -> None:
+        self.queue_ms.append(ms)
+        if len(self.queue_ms) > _MAX_SAMPLES:
+            del self.queue_ms[: -_MAX_SAMPLES]
 
     def summary(self) -> Dict[str, float]:
         lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        qms = np.asarray(self.queue_ms) if self.queue_ms else np.zeros(1)
+        slots = self.batched_requests + self.padding_slots
         return {
             "served": self.served,
             "rows": self.rows,
@@ -56,6 +79,13 @@ class ServerMetrics:
             "p50_ms": float(np.percentile(lat, 50)),
             "p90_ms": float(np.percentile(lat, 90)),
             "p99_ms": float(np.percentile(lat, 99)),
+            "batches": self.batches,
+            "batched_requests": self.batched_requests,
+            # fraction of launched batch slots carrying real requests
+            "batch_occupancy": self.batched_requests / max(slots, 1),
+            "padding_waste": self.padding_slots / max(slots, 1),
+            "queue_p50_ms": float(np.percentile(qms, 50)),
+            "queue_p99_ms": float(np.percentile(qms, 99)),
         }
 
 
@@ -101,15 +131,23 @@ class Engine:
     :func:`repro.engine.backends.register_backend`.
     """
 
+    #: Static batch shapes a micro-batch is padded up to.  A small fixed
+    #: menu bounds the number of compiled programs per template at
+    #: ``len(BATCH_SHAPES)`` while keeping padding waste < 50%.
+    BATCH_SHAPES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
     def __init__(self, dataset, backend: str = "eager",
                  layout: str = "extvp", mesh=None,
-                 plan_cache_size: int = 512):
+                 plan_cache_size: int = 512,
+                 batch_shapes: Optional[Sequence[int]] = None):
         if isinstance(backend, ExecutionBackend):
             self._backend = backend
         else:
             self._backend = create_backend(backend)
         if self._backend.name == "distributed" and mesh is None:
-            raise ValueError("distributed backend needs a mesh")
+            raise ValueError(
+                "distributed backend needs a mesh: pass mesh=jax.make_mesh("
+                "(n_devices,), ('data',)) (see docs/serving.md)")
         self.dataset = dataset
         self.layout = layout
         self.ctx = ExecutionContext(catalog=dataset.catalog,
@@ -117,6 +155,11 @@ class Engine:
                                     layout=layout, mesh=mesh)
         self.cache = PlanCache(plan_cache_size)
         self.metrics = ServerMetrics()
+        shapes = self.BATCH_SHAPES if batch_shapes is None \
+            else tuple(batch_shapes)
+        if not shapes or min(shapes) < 1:
+            raise ValueError("batch_shapes must be positive ints")
+        self.batch_shapes: Tuple[int, ...] = tuple(sorted(shapes))
 
     @property
     def backend(self) -> str:
@@ -164,19 +207,18 @@ class Engine:
         return plan.describe() if plan is not None else "(operator tree)"
 
     # -- execution ------------------------------------------------------------
-    def query(self, qtext: str) -> Result:
-        t0 = time.perf_counter()
+    def _lookup_counted(self, qtext: str) -> PreparedQuery:
         sig = template_signature(qtext)
         prepared = self._lookup(qtext, sig)
         if prepared is not None:
             self.metrics.plan_hits += 1
-        else:
-            self.metrics.plan_misses += 1
-            prepared = self._build(qtext, sig)
-        binding = prepared.template.binding_for(qtext) \
-            if prepared.template.rebindable else None
-        res = prepared.run(binding)
-        self.metrics.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+            return prepared
+        self.metrics.plan_misses += 1
+        return self._build(qtext, sig)
+
+    def _record(self, prepared: PreparedQuery, binding, res: Result) -> None:
+        """Per-request result accounting shared by the single-query and
+        batched paths."""
         self.metrics.served += 1
         self.metrics.rows += len(res)
         if len(res) == 0:
@@ -185,7 +227,70 @@ class Engine:
         if (plan is not None and plan.empty) or \
                 (binding is not None and binding.missing):
             self.metrics.short_circuits += 1
+
+    def query(self, qtext: str) -> Result:
+        t0 = time.perf_counter()
+        prepared = self._lookup_counted(qtext)
+        binding = prepared.template.binding_for(qtext) \
+            if prepared.template.rebindable else None
+        res = prepared.run(binding)
+        self.metrics.record_latency((time.perf_counter() - t0) * 1e3)
+        self._record(prepared, binding, res)
         return res
 
+    # -- batched execution -----------------------------------------------------
+    def bucket_shape(self, n: int) -> int:
+        """Smallest configured static batch shape holding ``n`` requests
+        (``n`` larger than the biggest shape is chunked by the caller)."""
+        for s in self.batch_shapes:
+            if s >= n:
+                return s
+        return self.batch_shapes[-1]
+
+    def _run_group(self, prepared: PreparedQuery,
+                   bindings: List[Optional[object]]) -> List[Result]:
+        """Execute same-template bindings through ``run_batch``, chunked
+        at the largest static shape and padded up to the bucket shape (the
+        pad repeats a real binding; padded results are dropped).  Backends
+        whose ``run_batch`` is the sequential loop are not padded —
+        padding only buys something when the batch is one static-shape
+        program launch."""
+        out: List[Result] = []
+        max_shape = self.batch_shapes[-1]
+        pad = getattr(prepared, "vectorized_batch", False)
+        for start in range(0, len(bindings), max_shape):
+            chunk = bindings[start: start + max_shape]
+            shape = self.bucket_shape(len(chunk)) if pad else len(chunk)
+            padded = chunk + [chunk[-1]] * (shape - len(chunk))
+            t0 = time.perf_counter()
+            res = prepared.run_batch(padded)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            self.metrics.batches += 1
+            self.metrics.batched_requests += len(chunk)
+            self.metrics.padding_slots += shape - len(chunk)
+            # every request in the batch observed the batch's wall time
+            self.metrics.record_latency(dt_ms, count=len(chunk))
+            out.extend(res[: len(chunk)])
+        return out
+
     def query_batch(self, qtexts: List[str]) -> List[Result]:
-        return [self.query(q) for q in qtexts]
+        """Execute a list of queries, amortizing device launches: requests
+        sharing a prepared template are stacked into one batched program
+        execution (see :meth:`PreparedQuery.run_batch`); results come back
+        in submission order.  This is the synchronous core the serving
+        layer's micro-batcher drains into."""
+        results: List[Optional[Result]] = [None] * len(qtexts)
+        groups: "OrderedDict[int, Tuple[PreparedQuery, List[int]]]" = \
+            OrderedDict()
+        for i, qtext in enumerate(qtexts):
+            prepared = self._lookup_counted(qtext)
+            groups.setdefault(id(prepared), (prepared, []))[1].append(i)
+        for prepared, idxs in groups.values():
+            bindings = [prepared.template.binding_for(qtexts[i])
+                        if prepared.template.rebindable else None
+                        for i in idxs]
+            group_results = self._run_group(prepared, bindings)
+            for i, binding, res in zip(idxs, bindings, group_results):
+                results[i] = res
+                self._record(prepared, binding, res)
+        return results  # type: ignore[return-value]

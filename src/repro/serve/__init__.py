@@ -1,5 +1,6 @@
-"""Serving runtime: the batched SPARQL query server (the paper's kind)."""
+"""Serving runtime: the micro-batched SPARQL query server."""
 
+from repro.serve.batcher import MicroBatcher, PendingQuery
 from repro.serve.engine import ServerMetrics, SparqlServer
 
-__all__ = ["SparqlServer", "ServerMetrics"]
+__all__ = ["SparqlServer", "ServerMetrics", "MicroBatcher", "PendingQuery"]

@@ -1,5 +1,5 @@
-"""Batched SPARQL serving front end — now a thin shell over the unified
-:mod:`repro.engine` facade.
+"""Batched SPARQL serving front end — a thin shell over the unified
+:mod:`repro.engine` facade plus a micro-batching request queue.
 
 Everything this module used to hand-roll (template-signature plan cache,
 per-backend executor wiring, statistics short-circuit accounting, metrics)
@@ -11,45 +11,63 @@ stable serving-layer entry point:
   prepared queries are cached in a bounded LRU on the template signature
   and the constants re-bind as runtime values — no re-parse, no
   re-compile (we cache compilation, never results).
+* **Micro-batching.**  ``submit()`` enqueues a request; a
+  :class:`~repro.serve.batcher.MicroBatcher` groups same-template
+  requests into size/latency-bounded buckets, executes each bucket as
+  ONE batched program launch (constants stacked into a leading batch
+  axis), and demuxes per-request results.  ``query()`` stays the
+  immediate single-request path.
 * **Statistics short-circuit.**  Provably-empty plans are answered
   without touching data and counted in the metrics.
 * **Engine selection.**  Any registered ExecutionBackend: ``"eager"``
   (host numpy), ``"jit"`` (static-shape XLA programs) or
   ``"distributed"`` (shard_map over a mesh) out of the box.
 * **Metrics.**  Latency percentiles, plan-cache hit rate, empty-answer
-  count, rows served — what an operator dashboards.
+  count, rows served, batch occupancy / padding waste / queue latency —
+  what an operator dashboards (definitions in docs/serving.md).
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence
 
 from repro.core.stats import Catalog
 from repro.engine import (
     Dataset, Engine, Result, ServerMetrics, available_backends,
     template_signature,
 )
+from repro.serve.batcher import MicroBatcher, PendingQuery
 
-__all__ = ["SparqlServer", "ServerMetrics", "template_signature"]
+__all__ = ["SparqlServer", "ServerMetrics", "MicroBatcher", "PendingQuery",
+           "template_signature"]
 
 
 class SparqlServer:
     """Serve SPARQL queries over a loaded ExtVP catalog.
 
-    A facade over ``Dataset.engine(backend)``; kept for serving-layer
-    ergonomics and backwards compatibility.
+    A facade over ``Dataset.engine(backend)`` with a micro-batching
+    queue in front; kept for serving-layer ergonomics and backwards
+    compatibility.  Batching knobs (``max_batch``, ``flush_ms``,
+    ``batch_shapes``) are documented in docs/serving.md.
     """
 
     def __init__(self, catalog: Catalog, layout: str = "extvp",
                  backend: str = "eager", mesh=None,
-                 plan_cache_size: int = 512):
+                 plan_cache_size: int = 512,
+                 max_batch: int = 32, flush_ms: float = 2.0,
+                 batch_shapes: Optional[Sequence[int]] = None):
         if backend not in available_backends():
             raise ValueError(
                 f"unknown backend {backend!r}; available: {available_backends()}")
+        # Engine.__init__ (reached below) fails fast on backend="distributed"
+        # with mesh=None — a server booted without a mesh must raise here at
+        # construction, never accept traffic and error per-request.
         self.dataset = Dataset(catalog=catalog, dictionary=catalog.dictionary)
         self.engine: Engine = self.dataset.engine(
             backend, layout=layout, mesh=mesh,
-            plan_cache_size=plan_cache_size)
+            plan_cache_size=plan_cache_size, batch_shapes=batch_shapes)
+        self.batcher = MicroBatcher(self.engine, max_batch=max_batch,
+                                    flush_ms=flush_ms)
         self.catalog = catalog
         self.layout = layout
         self.backend = backend
@@ -70,7 +88,22 @@ class SparqlServer:
 
     # -- public API ----------------------------------------------------------------
     def query(self, qtext: str) -> Result:
+        """Immediate single-request execution (no queueing)."""
         return self.engine.query(qtext)
 
+    def submit(self, qtext: str) -> PendingQuery:
+        """Enqueue a request for micro-batched execution; resolve the
+        returned handle with ``.result()`` (forces its bucket) or drain
+        everything with :meth:`flush`."""
+        return self.batcher.submit(qtext)
+
+    def flush(self) -> int:
+        """Drain all queued requests; returns how many were served."""
+        return self.batcher.flush()
+
     def query_batch(self, qtexts: List[str]) -> List[Result]:
-        return self.engine.query_batch(qtexts)
+        """Serve a request list through the micro-batcher: same-template
+        requests share one program launch; results in submission order."""
+        tickets = [self.batcher.submit(q) for q in qtexts]
+        self.batcher.flush()
+        return [t.result() for t in tickets]

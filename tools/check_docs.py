@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Docs lint: every intra-repo markdown link must resolve.
+
+Scans all ``*.md`` files (skipping hidden and build directories), pulls
+``[text](target)`` links, and verifies that relative targets exist on
+disk (anchors are stripped; external ``http(s)://`` / ``mailto:``
+targets are ignored).  Exit code 1 on any broken link — CI fails fast
+with a file:line listing.
+
+    python tools/check_docs.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv",
+             "results"}
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS or part.startswith(".")
+               for part in path.relative_to(root).parts[:-1]):
+            continue
+        yield path
+
+
+def check_file(path: Path, root: Path) -> list:
+    errors = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{path.relative_to(root)}:{lineno}: broken link "
+                    f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 \
+        else Path(__file__).resolve().parent.parent
+    errors = []
+    n_files = 0
+    for path in iter_markdown(root):
+        n_files += 1
+        errors.extend(check_file(path, root))
+    for e in errors:
+        print(e)
+    print(f"checked {n_files} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
