@@ -51,7 +51,8 @@ from repro.core.stats import Catalog
 from repro.core.table import Table, round_up_pow2
 from repro.rdf.dictionary import PAD, UNBOUND
 
-__all__ = ["DistBindings", "DistributedExecutor", "shard_table", "repartition"]
+__all__ = ["DistBindings", "DistributedExecutor", "shard_table",
+           "repartition", "extvp_pair_masks_sharded"]
 
 
 # ---------------------------------------------------------------------------
@@ -414,6 +415,59 @@ class DistributedExecutor:
                 if v not in cols:
                     cols.append(v)
         return tuple(cols)
+
+
+# ---------------------------------------------------------------------------
+# Distributed ExtVP construction (the load-job analogue of the query engine)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _extvp_pair_program(mesh: Mesh, axes: Tuple[str, ...], use_bitmap: bool,
+                        pallas: bool):
+    """``pallas`` is only a cache key: the kernel body reads the mutable
+    ``ops.use_pallas`` state at trace time, so a toggle needs a fresh
+    program rather than a replay of the stale trace."""
+    from repro.core.extvp_build import (
+        batch_pair_masks, batch_pair_masks_bitmap,
+    )
+
+    body = batch_pair_masks_bitmap if use_bitmap else batch_pair_masks
+    specs = dict(in_specs=(P(), P(), P(axes), P(axes), P(axes), P(axes)),
+                 out_specs=(P(axes), P(axes)))
+    try:
+        # pallas_call has no replication rule; the body has no collectives,
+        # so skipping the check is sound
+        fn = _shard_map(body, mesh=mesh, check_rep=False, **specs)
+    except TypeError:           # newer jax: the check_rep kwarg is gone
+        fn = _shard_map(body, mesh=mesh, **specs)
+    return jax.jit(fn)
+
+
+def extvp_pair_masks_sharded(keys: jax.Array, build_operand: jax.Array,
+                             pcol: jax.Array, pidx: jax.Array,
+                             bcol: jax.Array, bidx: jax.Array, mesh: Mesh,
+                             axes: Optional[Sequence[str]] = None,
+                             use_bitmap: bool = False
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Semi-join masks for a batch of packed ExtVP pairs with the
+    (kind, p1, p2) pair grid partitioned across the mesh.
+
+    S2RDF runs the §5 semi-join reductions as a distributed Spark job;
+    here the packed catalog (probe columns + the build-side operand —
+    sorted-unique tensor for the kernel path, dense presence bitmap when
+    ``use_bitmap``) is replicated and each device evaluates its B/S slice
+    of the pair batch — the load-time counterpart of the query engine's
+    sharded scans.  The batch size must divide evenly by the shard count
+    (the planner in :mod:`repro.core.extvp_build` rounds it up).
+    """
+    axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if pcol.shape[0] % n_shards:
+        raise ValueError(f"pair batch {pcol.shape[0]} must divide evenly "
+                         f"across {n_shards} shards")
+    from repro.kernels.ops import pallas_enabled
+    return _extvp_pair_program(mesh, axes, use_bitmap, pallas_enabled())(
+        keys, build_operand, pcol, pidx, bcol, bidx)
 
 
 def _allgather_relation(b: DistBindings, axis):

@@ -38,6 +38,7 @@ class Catalog:
     extvp: ExtVPBuild
     dictionary: object = None           # Optional[repro.rdf.Dictionary]
     vp_build_seconds: float = 0.0
+    with_extvp: bool = True             # False: VP-only store (no pair stats)
 
     # ---- statistics API (what Algorithms 1 & 4 consume) --------------------
     def sf(self, kind: str, p1: int, p2: int) -> float:
@@ -106,14 +107,25 @@ def build_catalog(
     threshold: float = 1.0,
     kinds: Tuple[str, ...] = KINDS,
     with_extvp: bool = True,
+    build_backend: str = "numpy",
+    mesh=None,
+    pair_batch: int = 512,
 ) -> Catalog:
-    """End-to-end load: TT -> VP -> ExtVP(τ) + stats."""
+    """End-to-end load: TT -> VP -> ExtVP(τ) + stats.
+
+    ``build_backend`` selects the ExtVP build substrate ("numpy" host
+    loop, "jax" pair-batched device pipeline, or "distributed" shard_map
+    pair grid over ``mesh``); all produce byte-identical catalogs.
+    """
     t0 = time.perf_counter()
     vp = build_vp(tt)
     vp_secs = time.perf_counter() - t0
     if with_extvp:
-        ext = build_extvp(vp, threshold=threshold, kinds=kinds)
+        ext = build_extvp(vp, threshold=threshold, kinds=kinds,
+                          backend=build_backend, mesh=mesh,
+                          pair_batch=pair_batch)
     else:
-        ext = ExtVPBuild(threshold=threshold)
+        ext = ExtVPBuild(threshold=threshold, kinds=tuple(kinds))
     return Catalog(tt=np.asarray(tt, dtype=np.int32), vp=vp, extvp=ext,
-                   dictionary=dictionary, vp_build_seconds=vp_secs)
+                   dictionary=dictionary, vp_build_seconds=vp_secs,
+                   with_extvp=with_extvp)

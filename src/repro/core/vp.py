@@ -19,9 +19,22 @@ threshold τ (§5.3).  Statistics (SF, sizes) are recorded for **all** pairs
 compiler uses them for table selection, join ordering, and the
 statistics-only ∅ short-circuit (ST-8).
 
-The builder is the offline analogue of S2RDF's Spark load job; it is pure
-vectorized numpy (sorted-array membership via ``np.isin``), with an
-optional Pallas-kernel path used by the device-side engine.
+The builder is the offline analogue of S2RDF's Spark load job.  Three
+substrates implement it behind ``build_extvp(..., backend=...)``:
+
+* ``"numpy"``       — the sequential host loop (sorted-array membership
+                      via ``np.searchsorted``), one semi-join per pair;
+* ``"jax"``         — the pair-batched device pipeline of
+                      :mod:`repro.core.extvp_build`: the catalog is
+                      packed once into padded column tensors and whole
+                      batches of (kind, p1, p2) pairs are evaluated in a
+                      single vmapped pass over the semi-join kernel
+                      (Pallas path included when enabled);
+* ``"distributed"`` — the same pipeline with the pair grid partitioned
+                      across a device mesh via ``shard_map`` (the direct
+                      analogue of S2RDF's distributed Spark load job).
+
+All three produce byte-identical tables and statistics.
 """
 
 from __future__ import annotations
@@ -52,10 +65,20 @@ class ExtVPBuild:
     threshold: float = 1.0
     build_seconds: float = 0.0
     n_semijoins: int = 0
+    backend: str = "numpy"
+    kinds: Tuple[str, ...] = KINDS
 
     # -- paper Table 2 style accounting --------------------------------------
     def n_tables(self, lo: float = 0.0, hi: float = 1.0) -> int:
-        return sum(1 for v in self.sf.values() if lo < v < hi)
+        """Pairs whose SF falls in the materialization band (lo, hi].
+
+        Bounds are aligned with the materialization predicate
+        ``0 < sf < 1 and sf <= τ``: the upper bound is *inclusive* (a
+        table with SF exactly equal to τ is materialized and must be
+        counted), while identity tables (SF = 1) never count, so
+        ``n_tables(0, build.threshold) == len(build.tables)``.
+        """
+        return sum(1 for v in self.sf.values() if lo < v <= hi and v < 1.0)
 
     def total_tuples(self) -> int:
         return sum(len(t) for t in self.tables.values())
@@ -94,6 +117,9 @@ def build_extvp(
     vp: Dict[int, Table],
     threshold: float = 1.0,
     kinds: Tuple[str, ...] = KINDS,
+    backend: str = "numpy",
+    mesh=None,
+    pair_batch: int = 512,
 ) -> ExtVPBuild:
     """Compute the ExtVP schema over a VP catalog.
 
@@ -101,40 +127,23 @@ def build_extvp(
     materialized (their statistics still are).  τ=1.0 reproduces the
     unthresholded schema (SF=1 identity tables are never stored, exactly
     as in the paper — "red tables" of Fig. 10).
-    """
-    t0 = time.perf_counter()
-    out = ExtVPBuild(threshold=threshold)
-    preds = sorted(vp.keys())
 
-    for p1 in preds:
-        t1 = vp[p1]
-        n1 = len(t1)
-        for p2 in preds:
-            t2 = vp[p2]
-            for kind in kinds:
-                if kind == SS and p1 == p2:
-                    continue  # identity by definition; paper excludes it
-                key = (kind, p1, p2)
-                if kind == SS:
-                    keys, other = t1.s, t2.unique_s
-                elif kind == OS:
-                    keys, other = t1.o, t2.unique_s
-                else:  # SO
-                    keys, other = t1.s, t2.unique_o
-                # cheap structural-empty detection (disjoint entity blocks)
-                own = t1.unique_o if kind == OS else t1.unique_s
-                if _ranges_disjoint(own, other):
-                    out.sf[key] = 0.0
-                    out.sizes[key] = 0
-                    continue
-                out.n_semijoins += 1
-                mask = _semijoin_mask(keys, other)
-                m = int(mask.sum())
-                sf = m / n1 if n1 else 0.0
-                out.sf[key] = sf
-                out.sizes[key] = m
-                if 0 < sf < 1.0 and sf <= threshold:
-                    rows = t1.rows[mask]
-                    out.tables[key] = Table(rows)  # mask preserves s-order
+    ``backend`` selects the build substrate (module docstring): the
+    ``"numpy"`` host loop, the ``"jax"`` pair-batched device pipeline, or
+    the ``"distributed"`` shard_map pair grid over ``mesh`` (all local
+    devices when None).  ``pair_batch`` bounds how many (kind, p1, p2)
+    pairs one device launch evaluates.
+    """
+    if backend not in ("numpy", "jax", "distributed"):
+        raise ValueError(f"unknown ExtVP build backend {backend!r}; "
+                         "expected 'numpy', 'jax', or 'distributed'")
+    t0 = time.perf_counter()
+    # One pipeline for every substrate (plan -> evaluate -> materialize),
+    # so the semi-join semantics live in exactly one place:
+    # repro.core.extvp_build.evaluate_pairs.
+    from repro.core.extvp_build import build_extvp_planned
+    out = build_extvp_planned(vp, threshold=threshold, kinds=kinds,
+                              backend=backend, mesh=mesh,
+                              pair_batch=pair_batch)
     out.build_seconds = time.perf_counter() - t0
     return out

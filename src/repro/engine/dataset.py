@@ -22,12 +22,14 @@ instances bound to any registered execution backend.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
 from repro.core.stats import Catalog, build_catalog
+from repro.core.table import Table
 from repro.core.vp import KINDS
 from repro.engine.engine import Engine
 from repro.engine.result import Result
@@ -37,12 +39,23 @@ __all__ = ["Dataset"]
 
 @dataclass
 class Dataset:
-    """A loaded RDF graph: dictionary + TT + VP + ExtVP(τ) + statistics."""
+    """A loaded RDF graph: dictionary + TT + VP + ExtVP(τ) + statistics.
+
+    ``build_backend`` selects the ExtVP construction substrate — the
+    ``"numpy"`` host loop, the ``"jax"`` pair-batched device pipeline, or
+    the ``"distributed"`` shard_map pair grid (see
+    :mod:`repro.core.extvp_build`); all three build byte-identical
+    catalogs, and the choice also seeds :meth:`append_triples`.
+    """
 
     catalog: Catalog
     dictionary: object = None          # repro.rdf.Dictionary
     schema: object = None              # Optional[WatDivSchema]
+    build_backend: str = "numpy"
     _engines: Dict[tuple, Engine] = field(default_factory=dict, repr=False)
+    #: accounting of the last append_triples call (pairs reused vs rebuilt)
+    last_append_report: Optional[Dict[str, int]] = field(default=None,
+                                                         repr=False)
 
     def __post_init__(self) -> None:
         if self.dictionary is None:
@@ -53,38 +66,109 @@ class Dataset:
     def from_triples(cls, triples: Iterable[Tuple[str, str, str]],
                      threshold: float = 1.0,
                      kinds: Tuple[str, ...] = KINDS,
-                     with_extvp: bool = True) -> "Dataset":
+                     with_extvp: bool = True,
+                     build_backend: str = "numpy",
+                     mesh=None) -> "Dataset":
         """Build the full store from (s, p, o) string triples."""
         from repro.rdf.dictionary import Dictionary
         d = Dictionary()
-        tt = d.encode_triples(triples)
+        tt = d.encode_triples(list(triples))
         cat = build_catalog(tt, d, threshold=threshold, kinds=kinds,
-                            with_extvp=with_extvp)
-        return cls(catalog=cat, dictionary=d)
+                            with_extvp=with_extvp,
+                            build_backend=build_backend, mesh=mesh)
+        return cls(catalog=cat, dictionary=d, build_backend=build_backend)
 
     @classmethod
     def watdiv(cls, scale: float = 1.0, seed: int = 0,
                threshold: float = 1.0,
                kinds: Tuple[str, ...] = KINDS,
-               with_extvp: bool = True) -> "Dataset":
+               with_extvp: bool = True,
+               build_backend: str = "numpy",
+               mesh=None) -> "Dataset":
         """Generate a WatDiv-like graph (paper §7) and build its store."""
         from repro.rdf.generator import WatDivConfig, generate_watdiv
         tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=scale,
                                                   seed=seed))
         cat = build_catalog(tt, d, threshold=threshold, kinds=kinds,
-                            with_extvp=with_extvp)
-        return cls(catalog=cat, dictionary=d, schema=sch)
+                            with_extvp=with_extvp,
+                            build_backend=build_backend, mesh=mesh)
+        return cls(catalog=cat, dictionary=d, schema=sch,
+                   build_backend=build_backend)
 
     @classmethod
     def from_ntriples(cls, path: str, threshold: float = 1.0,
                       kinds: Tuple[str, ...] = KINDS,
-                      with_extvp: bool = True) -> "Dataset":
+                      with_extvp: bool = True,
+                      build_backend: str = "numpy",
+                      mesh=None) -> "Dataset":
         """Load an N-Triples file (the paper's input format)."""
         from repro.rdf.ntriples import parse_ntriples
         with open(path) as f:
             triples = parse_ntriples(f.read())
         return cls.from_triples(triples, threshold=threshold, kinds=kinds,
-                                with_extvp=with_extvp)
+                                with_extvp=with_extvp,
+                                build_backend=build_backend, mesh=mesh)
+
+    # -- incremental load ------------------------------------------------------
+    def append_triples(self, triples: Iterable[Tuple[str, str, str]],
+                       build_backend: Optional[str] = None,
+                       mesh=None) -> Dict[str, int]:
+        """Append (s, p, o) string triples and incrementally refresh the
+        store: only the VP tables of predicates that received rows are
+        rebuilt, and only the ExtVP pairs those predicates touch — or
+        whose probe-side entity range the new build keys intersect — are
+        re-semi-joined (:func:`repro.core.extvp_build.incremental_pairs`).
+        The resulting catalog is equivalent to a from-scratch build over
+        the concatenated triples.
+
+        Cached engines are invalidated (their prepared plans scan the old
+        tables); re-fetch them via :meth:`engine` afterwards.  Returns the
+        pair-accounting report, also kept as ``last_append_report``.
+        """
+        triples = list(triples)
+        backend = build_backend or self.build_backend
+        cat = self.catalog
+        if not triples:
+            report = {"pairs": len(cat.extvp.sf), "reused": len(cat.extvp.sf),
+                      "range_skipped": 0, "recomputed": 0, "evaluated": 0}
+            self.last_append_report = report
+            return report
+        from repro.core.extvp_build import incremental_pairs
+        new_tt = self.dictionary.encode_triples(triples)
+        tt = np.concatenate([cat.tt, new_tt])
+        touched = {int(p) for p in np.unique(new_tt[:, 1])}
+
+        t0 = time.perf_counter()
+        vp = dict(cat.vp)
+        for p in sorted(touched):
+            rows = new_tt[new_tt[:, 1] == p][:, [0, 2]]
+            if p in vp:
+                rows = np.concatenate([vp[p].rows, rows])
+            vp[p] = Table.from_unsorted(rows)
+        vp_secs = cat.vp_build_seconds + (time.perf_counter() - t0)
+
+        # A store built with with_extvp=False has no pair statistics to
+        # extend — keep it ExtVP-less instead of back-filling the schema.
+        t0 = time.perf_counter()
+        if cat.with_extvp:
+            ext, report = incremental_pairs(
+                cat.extvp, cat.vp, vp, touched,
+                threshold=cat.extvp.threshold, kinds=tuple(cat.extvp.kinds),
+                backend=backend, mesh=mesh)
+        else:
+            from repro.core.vp import ExtVPBuild
+            ext = ExtVPBuild(threshold=cat.extvp.threshold,
+                             kinds=tuple(cat.extvp.kinds), backend=backend)
+            report = {"pairs": 0, "reused": 0, "range_skipped": 0,
+                      "recomputed": 0, "evaluated": 0}
+        ext.build_seconds = time.perf_counter() - t0
+        self.catalog = Catalog(tt=tt, vp=vp, extvp=ext,
+                               dictionary=self.dictionary,
+                               vp_build_seconds=vp_secs,
+                               with_extvp=cat.with_extvp)
+        self._engines.clear()
+        self.last_append_report = report
+        return report
 
     # -- engines --------------------------------------------------------------
     def engine(self, backend: str = "eager", layout: str = "extvp",

@@ -12,11 +12,15 @@ ascending.  On CPU the kernels run in ``interpret=True`` mode (Python
 execution of the kernel body — correct but slow); on TPU they compile.
 Set ``use_pallas(False)`` to route everything through the pure-jnp refs
 (the default on CPU for speed; tests exercise both paths explicitly).
+The ``REPRO_USE_PALLAS=1`` environment variable flips the default at
+import time — CI's ``tests-pallas`` job uses it to run the kernel and
+build suites end-to-end on the Pallas interpret path.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -31,7 +35,8 @@ __all__ = ["semijoin_mask", "join_probe", "bucket_count", "use_pallas",
 PROBE_PAD = np.int32(2**31 - 1)
 BUILD_PAD = np.int32(2**31 - 2)
 
-_STATE = {"use_pallas": False}  # CPU default: jnp reference path
+# CPU default: jnp reference path (REPRO_USE_PALLAS=1 opts in to Pallas)
+_STATE = {"use_pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1"}
 
 
 def use_pallas(enabled: bool) -> None:

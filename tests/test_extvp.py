@@ -104,6 +104,41 @@ def test_threshold_materialization():
         assert thr.sf[key] <= 0.2
 
 
+def test_n_tables_counts_sf_equal_tau():
+    """§5.3 boundary: a table with SF exactly equal to τ IS materialized,
+    and Table-2 accounting must see it — ``n_tables(0, τ)`` uses the
+    same inclusive upper bound as the materialization predicate."""
+    d = Dictionary()
+    # p: a->b->c->d, q: subjects {a, b} => SF(SS, p, q) = 2/3,
+    # SF(SS, q, p) = 1.0 (identity), SF(SO, p, p) = 2/3 ...
+    triples = [("a", "p", "b"), ("b", "p", "c"), ("c", "p", "d"),
+               ("a", "q", "x"), ("b", "q", "y")]
+    tt = d.encode_triples(triples)
+    vp = build_vp(tt)
+    tau = 2 / 3
+    build = build_extvp(vp, threshold=tau)
+    key = ("SS", d.id_of("p"), d.id_of("q"))
+    assert build.sf[key] == tau
+    assert key in build.tables                    # SF == τ is materialized
+    # ... and visible to the accounting at exactly the same bound
+    assert build.n_tables(0.0, tau) == len(build.tables)
+    assert build.n_tables(0.0, build.sf[key] - 1e-9) < build.n_tables(0.0, tau)
+    # identity tables never count, matching materialization
+    assert build.n_tables(0.0, 1.0) == \
+        sum(1 for v in build.sf.values() if 0 < v < 1.0)
+
+
+def test_n_tables_matches_materialization_across_taus(watdiv_small):
+    """For every τ, n_tables(0, τ) equals the number of materialized
+    tables of a τ-thresholded build (the alignment the strict upper
+    bound used to break at SF == τ)."""
+    cat, _, _ = watdiv_small
+    sfs = sorted({v for v in cat.extvp.sf.values() if 0 < v < 1})
+    for tau in [sfs[0], sfs[len(sfs) // 2], sfs[-1], 0.25]:
+        thr = build_extvp(cat.vp, threshold=tau)
+        assert thr.n_tables(0.0, tau) == len(thr.tables), tau
+
+
 def test_vp_partitions_cover_tt(watdiv_small):
     cat, d, sch = watdiv_small
     assert sum(len(t) for t in cat.vp.values()) == len(cat.tt)
