@@ -1,0 +1,120 @@
+"""Modifier-bearing queries on the device path: jit vs eager.
+
+Before the modifier pipeline, every FILTER / DISTINCT / ORDER BY /
+LIMIT query silently fell back to the eager host engine on the device
+backends; now the whole spine compiles into the static-shape XLA
+program (scan → join → filter-mask → project → sort-dedup → lexsort →
+static slice), and this benchmark measures the payoff on WatDiv-style
+templates — per-request (``Engine.query``) and micro-batched
+(``Engine.query_batch``).
+
+Emits ``BENCH_modifier_queries.json``::
+
+    {"scale": ..., "n_requests": ..., "batch": ...,
+     "queries": {name: {"eager_qps": ..., "jit_qps": ...,
+                        "jit_batch_qps": ..., "speedup": ...,
+                        "device_fallbacks": 0}, ...}}
+
+``device_fallbacks`` is asserted 0 for every template: the benchmark
+doubles as a regression gate that the modifier spine stays on device.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from benchmarks import common
+from repro.engine import Engine
+
+DEFAULT_OUT = "BENCH_modifier_queries.json"
+BATCH = 16
+
+
+def _templates(ds) -> Dict[str, List[str]]:
+    """WatDiv-style modifier workloads; constants cycle over users so
+    the jit path exercises constant re-binding, not just re-execution."""
+    n_users = ds.schema.n_users if ds.schema is not None else 64
+
+    def users(fmt: str, n: int) -> List[str]:
+        return [fmt.format(u=u % n_users) for u in range(n)]
+
+    return {
+        "follows_distinct_order_limit": users(
+            "SELECT DISTINCT ?v WHERE {{ wsdbm:User{u} wsdbm:follows ?v . "
+            "?v sorg:email ?e }} ORDER BY ?v LIMIT 10", 64),
+        "likes_filter_price": users(
+            "SELECT ?p ?x WHERE {{ wsdbm:User{u} wsdbm:likes ?p . "
+            "?p sorg:price ?x FILTER(?x < 300) }} ORDER BY DESC(?x) LIMIT 5",
+            64),
+        "rating_filter_order": [
+            "SELECT DISTINCT ?p WHERE { ?p rev:hasReview ?r . "
+            "?r rev:rating ?x FILTER(?x > 5) } ORDER BY ?p LIMIT 20"] * 32,
+    }
+
+
+def _qps(eng: Engine, requests: List[str], batch: int,
+         repeats: int = 3) -> float:
+    def serve_pass() -> None:
+        if batch == 1:
+            for q in requests:
+                eng.query(q)
+        else:
+            for i in range(0, len(requests), batch):
+                eng.query_batch(requests[i: i + batch])
+
+    serve_pass()                       # warmup: compiles + cap growth
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        serve_pass()
+        best = min(best, time.perf_counter() - t0)
+    return len(requests) / best
+
+
+def run(scale: float = 1.0, csv: Optional[common.Csv] = None,
+        out_path: str = DEFAULT_OUT) -> Dict[str, object]:
+    ds = common.facade(scale, threshold=0.25)
+    queries: Dict[str, Dict[str, float]] = {}
+    for name, requests in _templates(ds).items():
+        eager = Engine(ds, backend="eager")
+        jit1 = Engine(ds, backend="jit")
+        jitb = Engine(ds, backend="jit")
+        eager_qps = _qps(eager, requests, batch=1)
+        jit_qps = _qps(jit1, requests, batch=1)
+        jit_batch_qps = _qps(jitb, requests, batch=BATCH)
+        fallbacks = jit1.metrics.device_fallbacks + \
+            jitb.metrics.device_fallbacks
+        assert fallbacks == 0, \
+            f"{name}: modifier template fell back to eager"
+        queries[name] = {
+            "eager_qps": eager_qps,
+            "jit_qps": jit_qps,
+            "jit_batch_qps": jit_batch_qps,
+            "speedup": jit_batch_qps / eager_qps,
+            "device_fallbacks": fallbacks,
+        }
+        if csv is not None:
+            csv.add(f"modifiers/{name}", 1e6 / jit_batch_qps,
+                    f"jit_b{BATCH} {jit_batch_qps:.0f}q/s "
+                    f"x{jit_batch_qps / eager_qps:.1f} vs eager")
+    report = {
+        "scale": scale,
+        "n_requests": {k: len(v) for k, v in _templates(ds).items()},
+        "batch": BATCH,
+        "queries": queries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    print(json.dumps(run(scale=args.scale, out_path=args.out), indent=2))

@@ -12,8 +12,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import common, sec74_threshold, serve_throughput, \
-    table2_load, table3_st, table4_basic, table5_il
+from benchmarks import common, modifier_queries, sec74_threshold, \
+    serve_throughput, table2_load, table3_st, table4_basic, table5_il
 from benchmarks.common import Csv
 
 TABLES = {
@@ -23,6 +23,7 @@ TABLES = {
     "table5": table5_il.run,
     "sec74": sec74_threshold.run,
     "serve": serve_throughput.run,   # writes BENCH_serve_throughput.json
+    "modifiers": modifier_queries.run,  # writes BENCH_modifier_queries.json
 }
 
 

@@ -44,15 +44,31 @@ except AttributeError:
 from repro.core.algebra import is_var
 from repro.core.compiler import Plan, ScanStep
 from repro.core.jexec import (
-    A_NULL, A_SENT, B_NULL, B_SENT, JBindings, bounds_from_plan, device_join,
-    device_scan, _step_meta, _valid_mask,
+    A_NULL, A_SENT, B_NULL, B_SENT, JBindings, bounds_from_plan, check_spine,
+    device_distinct, device_filter, device_join, device_order, device_project,
+    device_resize, device_scan, device_slice, double_caps, _compact,
+    _mod_cap_seed, _pipeline_cols, _step_meta, _valid_mask,
 )
+from repro.core.modifiers import ModifierSpine, filter_const_slots
 from repro.core.stats import Catalog
 from repro.core.table import Table, round_up_pow2
 from repro.rdf.dictionary import PAD, UNBOUND
 
 __all__ = ["DistBindings", "DistributedExecutor", "shard_table",
            "repartition", "extvp_pair_masks_sharded"]
+
+
+def _smap(body, mesh, in_specs, out_specs):
+    """shard_map with the replication check off where the kwarg exists:
+    the gathered modifier tail (sort/scatter over all_gather-ed, hence
+    replicated, relations) is replication-safe by construction, but not
+    every primitive in it carries a rep rule on every jax version."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:          # newer jax: the check_rep kwarg is gone
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -153,7 +169,8 @@ class DistributedExecutor:
 
     def __init__(self, plan: Plan, catalog: Catalog, mesh: Mesh,
                  axes: Sequence[str] = ("data",), slack: float = 2.0,
-                 dual_partition: bool = False):
+                 dual_partition: bool = False,
+                 spine: Optional[ModifierSpine] = None):
         if plan.empty:
             raise ValueError("statistics-empty plan")
         self.plan = plan
@@ -163,6 +180,18 @@ class DistributedExecutor:
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
         self.dual_partition = dual_partition
         self.slack = slack
+        # Solution modifiers: FILTER + projection are row-local and run
+        # per shard; DISTINCT / ORDER BY / OFFSET / LIMIT need the whole
+        # relation, so the (small, capacity-bounded) per-shard results
+        # are all_gather-ed and the global modifiers run replicated.
+        self.spine = spine if spine is not None else ModifierSpine()
+        self._pipe_cols = _pipeline_cols(plan)
+        self._out_vars = check_spine(self.spine, self._pipe_cols, catalog)
+        self.filter_slots = filter_const_slots(self.spine.filters)
+        self.gathered = self.spine.needs_global
+        if self.gathered and not self._out_vars:
+            raise NotImplementedError(
+                "global modifiers need at least one output column")
 
         # storage: shard every referenced table by subject (and object)
         self.table_shards: List[Dict[str, Tuple[np.ndarray, np.ndarray]]] = []
@@ -181,6 +210,12 @@ class DistributedExecutor:
                 scan_est = max(1.0, scan_est * 0.01)
             est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
             self.caps.append(round_up_pow2(int(est * slack) + 16, 16))
+        # per-shard resize slot ahead of the gather: the global modifiers
+        # then sort/compact S·mod_cap rows instead of S·join_cap (see
+        # PlanExecutor; the slot rides the same overflow-retry protocol)
+        self._mod_resize = self.gathered
+        if self._mod_resize:
+            self.caps.append(_mod_cap_seed(self.spine, self.caps[-1]))
         self._default_bounds = bounds_from_plan(plan)
 
         # Which storage copy each scan uses.  Beyond-paper optimization:
@@ -216,7 +251,7 @@ class DistributedExecutor:
                     acc_cols.append(v)
 
     # -- traced per-shard program ---------------------------------------------
-    def _shard_program(self, caps, bounds, *flat_tables):
+    def _shard_program(self, caps, bounds, fconsts, values, *flat_tables):
         """Returns (data, n, total, per_step_overflow[n_steps]).  Like
         :meth:`repro.core.jexec.PlanExecutor._compose`, overflow is
         reported per step so the host retry doubles only the overflowing
@@ -251,8 +286,39 @@ class DistributedExecutor:
             acc = self._dist_join(acc, cur, caps[i], axis)
             ovfs.append(acc.overflow | cur.overflow)
         out_ovf = jax.lax.pmax(jnp.stack(ovfs), axis)
-        total = jax.lax.psum(acc.n, axis)
-        return acc.data, acc.n[None], total, out_ovf
+
+        # shard-local modifiers: FILTER masks (+ projection when no
+        # global modifier needs the un-projected sort keys)
+        no = jnp.asarray(False)
+        jb = JBindings(acc.cols, acc.data, acc.n, no)
+        ctr = [0]
+        for expr in self.spine.filters:
+            jb = device_filter(jb, expr, values, fconsts, ctr)
+        if not self.gathered:
+            jb = device_project(jb, self._out_vars)
+            total = jax.lax.psum(jb.n, axis)
+            return jb.data, jb.n[None], total, out_ovf
+        if self._mod_resize:
+            jb, mod_ovf = device_resize(jb, caps[len(plan.steps)])
+            out_ovf = jnp.concatenate(
+                [out_ovf, jax.lax.pmax(mod_ovf, axis)[None]])
+
+        # global modifiers: gather the (capacity-bounded) shard results,
+        # compact, then ORDER BY → project → DISTINCT → OFFSET/LIMIT
+        # replicated (ordering before projection, as on the host paths) —
+        # only the final n ≤ limit rows ever reach the host
+        gdata = jax.lax.all_gather(jb.data, axis, axis=0, tiled=True)
+        keep = gdata[:, 0] != PAD
+        cdata, cn, _ = _compact(gdata, keep, gdata.shape[0])
+        gb = JBindings(jb.cols, cdata, cn, no)
+        if self.spine.order:
+            gb = device_order(gb, self.spine.order, values)
+        gb = device_project(gb, self._out_vars)
+        if self.spine.distinct:
+            gb = device_distinct(gb)
+        if self.spine.has_slice:
+            gb = device_slice(gb, self.spine.offset, self.spine.limit)
+        return gb.data, gb.n[None], gb.n, out_ovf
 
     def _dist_join(self, a: DistBindings, b: DistBindings, out_cap: int,
                    axis) -> DistBindings:
@@ -289,21 +355,40 @@ class DistributedExecutor:
     # -- public API --------------------------------------------------------------
     bounds_from_plan = staticmethod(bounds_from_plan)
 
+    def fconsts_from_mapping(self, mapping=None) -> np.ndarray:
+        """Runtime filter-constant vector (see
+        :meth:`repro.core.jexec.PlanExecutor.fconsts_from_mapping`)."""
+        m = mapping or {}
+        return np.asarray([m.get(c, c) for c in self.filter_slots],
+                          dtype=np.int32)
+
+    @functools.cached_property
+    def _values(self) -> jax.Array:
+        vals = self.catalog.dictionary.values \
+            if self.catalog.dictionary is not None \
+            else np.empty(0, dtype=np.float64)
+        return jnp.asarray(vals.astype(np.float32))
+
+    def _out_specs(self):
+        if self.gathered:     # replicated post-gather results
+            return (P(), P(), P(), P())
+        return (P(self.axes), P(self.axes), P(), P())
+
     @functools.cached_property
     def _jitted(self):
-        specs = [P()]                       # bounds (n_steps, 2) replicated
+        specs = [P(), P(), P()]   # bounds / fconsts / values replicated
         for shards, copy in zip(self.table_shards, self.scan_copy):
             specs.append(P(self.axes))      # rows (S, cap, 2) split on axes
             specs.append(P(self.axes))      # ns   (S,)
 
-        def wrapper(caps, bounds, *flat):
-            fn = _shard_map(
+        def wrapper(caps, bounds, fconsts, values, *flat):
+            fn = _smap(
                 functools.partial(self._shard_program, caps),
                 mesh=self.mesh,
                 in_specs=tuple(specs),
-                out_specs=(P(self.axes), P(self.axes), P(), P()),
+                out_specs=self._out_specs(),
             )
-            return fn(bounds, *flat)
+            return fn(bounds, fconsts, values, *flat)
 
         return jax.jit(wrapper, static_argnums=(0,))
 
@@ -313,25 +398,32 @@ class DistributedExecutor:
         # every shard and vmapped *inside* shard_map, so the batch axis
         # rides alongside the data axis — every device executes all B
         # constant-bindings over its own table shard in one launch, and
-        # results stay sharded per (request, shard).
-        specs = [P()]                       # bounds (B, n_steps, 2) replicated
+        # results stay sharded per (request, shard) (or replicated per
+        # request once a global modifier gathers them).
+        specs = [P(), P(), P()]   # bounds (B,...) / fconsts (B,...) / values
         for _ in self.table_shards:
             specs.append(P(self.axes))      # rows (S, cap, 2) split on axes
             specs.append(P(self.axes))      # ns   (S,)
 
-        def wrapper(caps, bounds_b, *flat):
-            def shard_fn(bounds_b, *flat):
-                return jax.vmap(
-                    lambda b: self._shard_program(caps, b, *flat)
-                )(bounds_b)
+        if self.gathered:
+            out_specs = (P(), P(), P(), P())
+        else:
+            out_specs = (P(None, self.axes), P(None, self.axes), P(), P())
 
-            fn = _shard_map(
+        def wrapper(caps, bounds_b, fconsts_b, values, *flat):
+            def shard_fn(bounds_b, fconsts_b, values, *flat):
+                return jax.vmap(
+                    lambda b, fc: self._shard_program(caps, b, fc, values,
+                                                      *flat)
+                )(bounds_b, fconsts_b)
+
+            fn = _smap(
                 shard_fn,
                 mesh=self.mesh,
                 in_specs=tuple(specs),
-                out_specs=(P(None, self.axes), P(None, self.axes), P(), P()),
+                out_specs=out_specs,
             )
-            return fn(bounds_b, *flat)
+            return fn(bounds_b, fconsts_b, values, *flat)
 
         return jax.jit(wrapper, static_argnums=(0,))
 
@@ -347,33 +439,44 @@ class DistributedExecutor:
         caps = caps or tuple(self.caps)
         flat = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in self._flat_inputs()]
         bshape = jax.ShapeDtypeStruct(self._default_bounds.shape, jnp.int32)
-        return self._jitted.lower(caps, bshape, *flat)
+        fshape = jax.ShapeDtypeStruct((len(self.filter_slots),), jnp.int32)
+        vshape = jax.ShapeDtypeStruct(self._values.shape, jnp.float32)
+        return self._jitted.lower(caps, bshape, fshape, vshape, *flat)
 
-    def run(self, max_retries: int = 6,
-            bounds: Optional[np.ndarray] = None) -> Tuple[np.ndarray, Tuple[str, ...]]:
+    def run(self, max_retries: int = 8,
+            bounds: Optional[np.ndarray] = None,
+            fconsts: Optional[np.ndarray] = None
+            ) -> Tuple[np.ndarray, Tuple[str, ...]]:
         flat = self._flat_inputs()
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
         bj = jnp.asarray(b)
+        fc = self.fconsts_from_mapping(None) if fconsts is None else \
+            np.asarray(fconsts, dtype=np.int32).reshape(len(self.filter_slots))
+        fj = jnp.asarray(fc)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, ns, total, ovf = self._jitted(caps, bj, *flat)
+            data, ns, total, ovf = self._jitted(caps, bj, fj, self._values,
+                                                *flat)
             ovf = np.asarray(ovf)
             if not ovf.any():
                 self.caps = list(caps)   # keep grown caps across requests
-                rows = []
                 data = np.asarray(data)
                 ns = np.asarray(ns)
+                if self.gathered:        # replicated, already finalized
+                    return data[: int(ns[0])], self._final_cols()
+                rows = []
                 per = data.reshape(self.n_shards, -1, data.shape[-1])
                 for i in range(self.n_shards):
                     rows.append(per[i][: int(ns[i])])
                 out = np.concatenate(rows, axis=0) if rows else np.empty((0, 0))
                 return out, self._final_cols()
-            caps = tuple(c * 2 if ovf[i] else c for i, c in enumerate(caps))
+            caps = double_caps(caps, ovf, len(self.plan.steps))
         raise RuntimeError("distributed join capacity overflow after retries")
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
-                  max_retries: int = 6) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+                  fconsts_batch: Optional[Sequence[np.ndarray]] = None,
+                  max_retries: int = 8) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of the plan in one sharded launch;
         see :meth:`repro.core.jexec.PlanExecutor.run_batch` for the retry
         contract (any element overflowing retries the whole batch)."""
@@ -384,17 +487,28 @@ class DistributedExecutor:
         bb = np.stack([np.asarray(b, dtype=np.int32).reshape(shape)
                        for b in bounds_batch])
         bj = jnp.asarray(bb)
+        n_fc = len(self.filter_slots)
+        if fconsts_batch is None:
+            fb = np.tile(self.fconsts_from_mapping(None), (len(bb), 1))
+        else:
+            fb = np.stack([np.asarray(f, dtype=np.int32).reshape(n_fc)
+                           for f in fconsts_batch])
+        fj = jnp.asarray(fb)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, ns, total, ovf = self._jitted_batch(caps, bj, *flat)
+            data, ns, total, ovf = self._jitted_batch(caps, bj, fj,
+                                                      self._values, *flat)
             ovf = np.asarray(ovf)                # (B, n_steps)
             if not ovf.any():
                 self.caps = list(caps)
                 data = np.asarray(data)          # (B, S*cap, k)
-                ns = np.asarray(ns)              # (B, S)
+                ns = np.asarray(ns)              # (B, S) or (B, 1)
                 cols = self._final_cols()
                 out = []
                 for bi in range(data.shape[0]):
+                    if self.gathered:
+                        out.append((data[bi][: int(ns[bi, 0])], cols))
+                        continue
                     per = data[bi].reshape(self.n_shards, -1, data.shape[-1])
                     rows = [per[i][: int(ns[bi, i])]
                             for i in range(self.n_shards)]
@@ -402,19 +516,12 @@ class DistributedExecutor:
                         else np.empty((0, 0))
                     out.append((merged, cols))
                 return out
-            step_ovf = ovf.any(axis=0)
-            caps = tuple(c * 2 if step_ovf[i] else c
-                         for i, c in enumerate(caps))
+            caps = double_caps(caps, ovf.any(axis=0), len(self.plan.steps))
         raise RuntimeError(
             "distributed join capacity overflow after retries (batched)")
 
     def _final_cols(self) -> Tuple[str, ...]:
-        cols: List[str] = []
-        for step in self.plan.steps:
-            for v in _step_meta(step)[4]:
-                if v not in cols:
-                    cols.append(v)
-        return tuple(cols)
+        return self._out_vars
 
 
 # ---------------------------------------------------------------------------

@@ -32,10 +32,12 @@ from repro.core.algebra import (
     is_var,
 )
 from repro.core.compiler import Plan, ScanStep, compile_bgp
+from repro.core.modifiers import ModifierSpine, peel_spine
 from repro.core.stats import Catalog
 from repro.rdf.dictionary import UNBOUND
 
-__all__ = ["Bindings", "execute", "execute_plan", "scan_step", "natural_join"]
+__all__ = ["Bindings", "execute", "execute_plan", "scan_step", "natural_join",
+           "apply_spine_host", "stable_unique_rows", "order_rows"]
 
 
 @dataclass
@@ -257,9 +259,12 @@ def union(a: Bindings, b: Bindings) -> Bindings:
 # ---------------------------------------------------------------------------
 
 def _operand(b: Bindings, values: np.ndarray, term, numeric: bool):
-    """Return (ids or None, numeric values) arrays for a filter operand."""
+    """Return (ids or None, numeric values) arrays for a filter operand.
+    A variable the relation does not bind is UNBOUND everywhere (never
+    satisfies a comparison — the reference-oracle semantics)."""
     if isinstance(term, str) and term.startswith("?"):
-        ids = b.col(term)
+        ids = b.col(term) if term in b.cols else \
+            np.full(len(b), UNBOUND, dtype=np.int32)
         if numeric:
             safe = np.clip(ids, 0, len(values) - 1)
             val = np.where(ids >= 0, values[safe], np.nan)
@@ -289,6 +294,8 @@ def eval_filter(expr: FilterExpr, b: Bindings, catalog: Catalog) -> np.ndarray:
     if isinstance(expr, NotExpr):
         return ~eval_filter(expr.arg, b, catalog)
     if isinstance(expr, Bound):
+        if expr.var not in b.cols:
+            return np.zeros(len(b), dtype=bool)
         return b.col(expr.var) != UNBOUND
     assert isinstance(expr, Cmp)
 
@@ -354,21 +361,10 @@ def _eval(node: Node, catalog: Catalog, layout: str = "extvp") -> Bindings:
                      _eval(node.right, catalog, layout))
     if isinstance(node, Distinct):
         child = _eval(node.child, catalog, layout)
-        return Bindings(child.cols, np.unique(child.data, axis=0))
+        return Bindings(child.cols, stable_unique_rows(child.data))
     if isinstance(node, OrderBy):
-        child = _eval(node.child, catalog, layout)
-        if not len(child):
-            return child
-        values = catalog.dictionary.values
-        keys = []
-        for var, asc in reversed(node.keys):
-            ids = child.col(var)
-            safe = np.clip(ids, 0, len(values) - 1)
-            v = np.where(ids >= 0, values[safe], np.nan)
-            v = np.where(np.isnan(v), ids.astype(np.float64), v)
-            keys.append(v if asc else -v)
-        order = np.lexsort(keys)
-        return Bindings(child.cols, child.data[order])
+        return order_rows(_eval(node.child, catalog, layout), node.keys,
+                          catalog)
     if isinstance(node, Slice):
         child = _eval(node.child, catalog, layout)
         end = None if node.limit is None else node.offset + node.limit
@@ -388,11 +384,75 @@ def _project(b: Bindings, vars: Optional[List[str]]) -> Bindings:
     return Bindings(tuple(vars), data)
 
 
+# ---------------------------------------------------------------------------
+# Solution modifiers (canonical order, shared with the device engines)
+# ---------------------------------------------------------------------------
+
+def stable_unique_rows(data: np.ndarray) -> np.ndarray:
+    """First-occurrence-stable row dedup.  SPARQL DISTINCT must preserve
+    the sequence order (an ORDER BY established before or after it must
+    survive); ``np.unique`` alone re-sorts the rows, which is the
+    modifier-ordering bug this replaces."""
+    if len(data) <= 1:
+        return data
+    _, idx = np.unique(data, axis=0, return_index=True)
+    return data[np.sort(idx)]
+
+
+def order_rows(b: Bindings, keys: Sequence[Tuple[str, bool]],
+               catalog: Catalog) -> Bindings:
+    """ORDER BY over the dictionary's numeric value table: numeric
+    literals sort by value, everything else by term id; stable, so tied
+    rows keep their prior order.  Keys over variables the relation does
+    not bind are constant (≡ skipped)."""
+    if not len(b) or not keys:
+        return b
+    values = catalog.dictionary.values if catalog.dictionary is not None \
+        else np.empty(0, dtype=np.float64)
+    ks = []
+    for var, asc in reversed(keys):
+        if var not in b.cols:
+            continue
+        ids = b.col(var)
+        if len(values):
+            safe = np.clip(ids, 0, len(values) - 1)
+            v = np.where(ids >= 0, values[safe], np.nan)
+        else:
+            v = np.full(len(b), np.nan)
+        v = np.where(np.isnan(v), ids.astype(np.float64), v)
+        ks.append(v if asc else -v)
+    if not ks:
+        return b
+    return Bindings(b.cols, b.data[np.lexsort(ks)])
+
+
+def apply_spine_host(b: Bindings, spine: ModifierSpine,
+                     catalog: Catalog) -> Bindings:
+    """Apply a modifier spine in the canonical SPARQL order:
+    FILTER* → ORDER BY → project → DISTINCT → OFFSET/LIMIT (ordering
+    runs before projection, so sort keys outside the SELECT list work;
+    projection and stable dedup both preserve the established order)."""
+    for expr in spine.filters:
+        if len(b):
+            b = Bindings(b.cols, b.data[eval_filter(expr, b, catalog)])
+    if spine.order:
+        b = order_rows(b, spine.order, catalog)
+    b = _project(b, list(spine.project) if spine.project is not None else None)
+    if spine.distinct:
+        b = Bindings(b.cols, stable_unique_rows(b.data))
+    if spine.has_slice:
+        end = None if spine.limit is None else spine.offset + spine.limit
+        b = Bindings(b.cols, b.data[spine.offset:end])
+    return b
+
+
 def execute(query: Query, catalog: Catalog, layout: str = "extvp") -> Bindings:
     """Evaluate a parsed query.  ``layout`` selects the storage schema the
-    compiler targets: "extvp" (default), "vp" or "tt" (paper §4 baselines)."""
-    out = _eval(query.root, catalog, layout)
-    out = _project(out, query.select)
-    if query.distinct:
-        out = Bindings(out.cols, np.unique(out.data, axis=0))
-    return out
+    compiler targets: "extvp" (default), "vp" or "tt" (paper §4 baselines).
+
+    The modifier spine is peeled off the root and applied in the
+    canonical order → project → distinct → slice sequence (DISTINCT
+    before the slice and order-preserving, ORDER BY before projection),
+    fixing the historical dedup-after-LIMIT behaviour."""
+    core, spine = peel_spine(query)
+    return apply_spine_host(_eval(core, catalog, layout), spine, catalog)

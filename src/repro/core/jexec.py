@@ -33,15 +33,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.algebra import BoolOp, Bound, Cmp, FilterExpr, NotExpr, is_var
 from repro.core.compiler import Plan, ScanStep
+from repro.core.modifiers import (
+    ModifierSpine, filter_const_slots, filter_variables,
+)
 from repro.core.stats import Catalog
 from repro.core.table import round_up_pow2
 from repro.rdf.dictionary import PAD, UNBOUND
-from repro.core.algebra import is_var
 
 __all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan",
            "device_scan_windowed", "build_key", "bounds_from_plan",
-           "trace_count"]
+           "trace_count", "device_filter", "device_project",
+           "device_distinct", "device_order", "device_slice"]
 
 A_SENT = np.int32(2**31 - 1)   # probe-side padded-row key (== PAD)
 B_SENT = np.int32(2**31 - 2)   # build-side padded-row key (sort-max, != A_SENT)
@@ -220,6 +224,197 @@ def device_join(a: JBindings, b: JBindings, out_cap: int,
 
 
 # ---------------------------------------------------------------------------
+# Solution modifiers on device (the spine of repro.core.modifiers)
+#
+# All five operators keep the JBindings invariant — valid rows occupy
+# [0, n) contiguously with PAD rows behind — and none can overflow (a
+# modifier never grows the relation), so the per-step overflow/retry
+# protocol of the scan/join pipeline is untouched.
+# ---------------------------------------------------------------------------
+
+def _filter_operand(b: JBindings, values: jax.Array, term, numeric: bool,
+                    fconsts: jax.Array, ctr: List[int]):
+    """(ids, numeric values) for one comparison operand.  Constant ids
+    are *runtime* scalars read from ``fconsts`` (slot order fixed by
+    :func:`repro.core.modifiers.filter_const_slots`), so re-binding a
+    template constant never re-traces; float literals are trace-time
+    constants (they are part of the template text)."""
+    cap = b.capacity
+    nv = values.shape[0]
+    if isinstance(term, str):            # variable
+        ids = b.data[:, b.cols.index(term)]
+        if not numeric:
+            return ids, None
+        if nv:
+            safe = jnp.clip(ids, 0, nv - 1)
+            val = jnp.where(ids >= 0, values[safe], jnp.nan)
+        else:
+            val = jnp.full((cap,), jnp.nan, values.dtype)
+        return ids, val
+    if isinstance(term, float):          # numeric literal
+        return None, jnp.full((cap,), term, values.dtype)
+    tid = fconsts[ctr[0]]                # constant id -> runtime slot
+    ctr[0] += 1
+    ids = jnp.full((cap,), tid, jnp.int32)
+    if not numeric:
+        return ids, None
+    if nv:
+        ok = (tid >= 0) & (tid < nv)
+        v = jnp.where(ok, values[jnp.clip(tid, 0, nv - 1)], jnp.nan)
+    else:
+        v = jnp.asarray(jnp.nan, values.dtype)
+    return ids, jnp.full((cap,), v, values.dtype)
+
+
+def _filter_mask(expr: FilterExpr, b: JBindings, values: jax.Array,
+                 fconsts: jax.Array, ctr: List[int]) -> jax.Array:
+    """Boolean keep-mask over the relation's rows; mirrors the eager
+    :func:`repro.core.executor.eval_filter` semantics exactly (identity
+    comparison on ids, numeric comparison through the dictionary value
+    table, UNBOUND/type-error rows dropped)."""
+    if isinstance(expr, BoolOp):
+        masks = [_filter_mask(e, b, values, fconsts, ctr) for e in expr.args]
+        out = masks[0]
+        for m in masks[1:]:
+            out = (out & m) if expr.op == "&&" else (out | m)
+        return out
+    if isinstance(expr, NotExpr):
+        return ~_filter_mask(expr.arg, b, values, fconsts, ctr)
+    if isinstance(expr, Bound):
+        return b.data[:, b.cols.index(expr.var)] != UNBOUND
+    assert isinstance(expr, Cmp)
+    numeric = expr.op in ("<", "<=", ">", ">=") or \
+        isinstance(expr.lhs, float) or isinstance(expr.rhs, float)
+    lid, lval = _filter_operand(b, values, expr.lhs, numeric, fconsts, ctr)
+    rid, rval = _filter_operand(b, values, expr.rhs, numeric, fconsts, ctr)
+    if numeric:
+        if expr.op == "=":
+            return lval == rval
+        if expr.op == "!=":
+            return (lval != rval) & ~jnp.isnan(lval) & ~jnp.isnan(rval)
+        if expr.op == "<":
+            return lval < rval
+        if expr.op == "<=":
+            return lval <= rval
+        if expr.op == ">":
+            return lval > rval
+        return lval >= rval
+    ok = (lid != UNBOUND) & (rid != UNBOUND)
+    return ((lid == rid) if expr.op == "=" else (lid != rid)) & ok
+
+
+def device_filter(b: JBindings, expr: FilterExpr, values: jax.Array,
+                  fconsts: jax.Array, ctr: List[int]) -> JBindings:
+    """FILTER: mask + stable compact (kept rows stay in order)."""
+    keep = _filter_mask(expr, b, values, fconsts, ctr) & \
+        _valid_mask(b.capacity, b.n)
+    data, n, _ = _compact(b.data, keep, b.capacity)
+    return JBindings(b.cols, data, n, b.overflow)
+
+
+def device_project(b: JBindings, out_vars: Sequence[str]) -> JBindings:
+    """Projection: gather the selected columns (UNBOUND-fill variables
+    the pipeline does not produce), re-PAD invalid rows."""
+    cap = b.capacity
+    if not out_vars:
+        return JBindings((), b.data[:, :0], b.n, b.overflow)
+    cols = [b.data[:, b.cols.index(v)] if v in b.cols
+            else jnp.full((cap,), UNBOUND, jnp.int32) for v in out_vars]
+    data = jnp.stack(cols, axis=1)
+    data = jnp.where(_valid_mask(cap, b.n)[:, None], data, PAD)
+    return JBindings(tuple(out_vars), data, b.n, b.overflow)
+
+
+def device_resize(b: JBindings, out_cap: int
+                  ) -> Tuple[JBindings, jax.Array]:
+    """Re-buffer the relation to ``out_cap`` rows — a pure static
+    truncation (valid rows are contiguous at the front by the pipeline
+    invariant, so no sort/gather is needed).  Returns the relation and
+    an overflow flag for the retry protocol: DISTINCT/ORDER BY sort this
+    buffer, so right-sizing it is what keeps modifier queries from
+    paying an O(join_cap log join_cap) sort over mostly-PAD rows."""
+    cap, k = b.data.shape
+    if out_cap < cap:
+        data = b.data[:out_cap]
+    elif out_cap > cap:
+        data = jnp.concatenate(
+            [b.data, jnp.full((out_cap - cap, k), PAD, b.data.dtype)], axis=0)
+    else:
+        data = b.data
+    ovf = b.n > out_cap
+    return JBindings(b.cols, data, jnp.minimum(b.n, out_cap),
+                     b.overflow), ovf
+
+
+def device_distinct(b: JBindings) -> JBindings:
+    """DISTINCT: lexsort + adjacent-unique to find duplicates, then a
+    stable compact of the FIRST occurrence of each distinct row in the
+    original order — exactly the eager engine's first-occurrence-stable
+    dedup, so an order established before (or after) it survives."""
+    cap, k = b.data.shape
+    if k == 0:   # zero-column relation: dedup of n empty mappings is one
+        return JBindings(b.cols, b.data, jnp.minimum(b.n, 1), b.overflow)
+    valid = _valid_mask(cap, b.n)
+    keys = [b.data[:, j] for j in range(k - 1, -1, -1)]
+    keys.append((~valid).astype(jnp.int32))        # valid rows first
+    order = jnp.lexsort(keys)
+    sdata = b.data[order]
+    svalid = valid[order]
+    same_prev = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        jnp.all(sdata[1:] == sdata[:-1], axis=1)])
+    keep_sorted = svalid & ~same_prev
+    keep = jnp.zeros(cap, bool).at[order].set(keep_sorted)
+    data, n, _ = _compact(b.data, keep, cap)
+    return JBindings(b.cols, data, n, b.overflow)
+
+
+def device_order(b: JBindings, keys: Sequence[Tuple[str, bool]],
+                 values: jax.Array) -> JBindings:
+    """ORDER BY: stable lexsort over the dictionary's numeric value
+    table (numeric literals by value, other terms by id — the eager
+    ``order_rows`` semantics); PAD rows keep sorting last."""
+    cap = b.capacity
+    valid = _valid_mask(cap, b.n)
+    nv = values.shape[0]
+    ks = []
+    for var, asc in reversed(tuple(keys)):
+        if var not in b.cols:
+            continue                      # unbound key: constant, no-op
+        ids = b.data[:, b.cols.index(var)]
+        if nv:
+            safe = jnp.clip(ids, 0, nv - 1)
+            v = jnp.where(ids >= 0, values[safe], jnp.nan)
+        else:
+            v = jnp.full((cap,), jnp.nan, values.dtype)
+        v = jnp.where(jnp.isnan(v), ids.astype(values.dtype), v)
+        ks.append(v if asc else -v)
+    if not ks:
+        return b
+    ks.append((~valid).astype(jnp.int32))          # valid rows first
+    order = jnp.lexsort(ks)
+    return JBindings(b.cols, b.data[order], b.n, b.overflow)
+
+
+def device_slice(b: JBindings, offset: int, limit: Optional[int]) -> JBindings:
+    """OFFSET/LIMIT: static row-window over the compacted relation.  A
+    LIMIT below the buffer capacity also *trims the buffer*, so only the
+    final ≤ limit rows ever transfer back to the host."""
+    cap, k = b.data.shape
+    data, n = b.data, b.n
+    if offset:
+        shift = min(int(offset), cap)
+        data = jnp.concatenate(
+            [data[shift:], jnp.full((shift, k), PAD, data.dtype)], axis=0)
+        n = jnp.maximum(n - offset, 0)
+    if limit is not None:
+        n = jnp.minimum(n, limit)
+        if limit < cap:
+            data = data[:max(int(limit), 0)]
+    return JBindings(b.cols, data, n, b.overflow)
+
+
+# ---------------------------------------------------------------------------
 # Plan executor
 # ---------------------------------------------------------------------------
 
@@ -262,6 +457,97 @@ def bounds_from_plan(plan: Plan) -> np.ndarray:
     return out
 
 
+def _pipeline_cols(plan: Plan) -> Tuple[str, ...]:
+    """Variables the scan/join pipeline produces, first-seen order."""
+    cols: List[str] = []
+    for step in plan.steps:
+        for v in _step_meta(step)[4]:
+            if v not in cols:
+                cols.append(v)
+    return tuple(cols)
+
+
+def _mod_cap_seed(spine: ModifierSpine, pipeline_cap: int) -> int:
+    """Initial capacity of the modifier resize slot: generous around the
+    slice window when there is one, a modest constant otherwise; never
+    beyond the pipeline buffer (more rows cannot exist) and never below
+    1/32 of it, so the overflow-retry loop reaches any true result size
+    within its doubling budget."""
+    if spine.limit is not None:
+        est = max(64, 4 * (spine.offset + spine.limit))
+    else:
+        est = 4096
+    est = max(est, pipeline_cap // 32)
+    return min(round_up_pow2(est, 64), round_up_pow2(pipeline_cap, 64))
+
+
+def double_caps(caps: Tuple[int, ...], ovf, n_steps: int) -> Tuple[int, ...]:
+    """One overflow-retry step: double every overflowing capacity.  The
+    modifier resize slot (index ``n_steps``, when present) additionally
+    keeps pace with the pipeline caps — its overflow flag only fires
+    once the pipeline actually delivers more rows, so without the floor
+    the two growth phases would run in series and could exhaust the
+    retry budget on explosive joins."""
+    new = [c * 2 if ovf[i] else c for i, c in enumerate(caps)]
+    if len(new) > n_steps and n_steps:
+        pipe_max = max(new[:n_steps])
+        new[n_steps] = min(max(new[n_steps], pipe_max // 4),
+                           round_up_pow2(pipe_max, 64))
+    return tuple(new)
+
+
+def _spine_uses_values(spine: ModifierSpine) -> bool:
+    """True when the compiled spine reads the numeric value table:
+    ORDER BY keys, or any filter comparison that is numeric (order ops,
+    or a float literal operand).  Identity-only filters don't."""
+    if spine.order:
+        return True
+
+    def walk(e) -> bool:
+        if isinstance(e, Cmp):
+            return e.op in ("<", "<=", ">", ">=") or \
+                isinstance(e.lhs, float) or isinstance(e.rhs, float)
+        if isinstance(e, BoolOp):
+            return any(walk(a) for a in e.args)
+        if isinstance(e, NotExpr):
+            return walk(e.arg)
+        return False
+
+    return any(walk(e) for e in spine.filters)
+
+
+def check_spine(spine: ModifierSpine, pipe_cols: Tuple[str, ...],
+                catalog: Optional[Catalog] = None) -> Tuple[str, ...]:
+    """Validate that a modifier spine is compilable over a pipeline that
+    binds ``pipe_cols``; raises NotImplementedError (the backends'
+    fall-back-to-eager signal) otherwise.  Returns the output columns.
+
+    The device engines run with x64 disabled, so the dictionary's
+    float64 value table is gathered as float32 on device.  When the
+    spine actually reads values (numeric FILTER, ORDER BY) and the table
+    is not exactly float32-representable — values above 2^24, sub-float32
+    deltas, or an id space that large (ids are the sort fallback key) —
+    the host engines would disagree with the device, so those templates
+    stay on the (counted) eager path instead of silently diverging."""
+    for v in filter_variables(spine.filters):
+        if v not in pipe_cols:
+            raise NotImplementedError(
+                f"filter variable {v} is not bound by the BGP pipeline")
+    if catalog is not None and catalog.dictionary is not None and \
+            _spine_uses_values(spine):
+        if len(catalog.dictionary) >= 2 ** 24:
+            raise NotImplementedError(
+                "id space exceeds float32-exact range for device sorts")
+        vals = catalog.dictionary.values
+        finite = vals[~np.isnan(vals)]
+        if len(finite) and not np.array_equal(
+                finite.astype(np.float32).astype(np.float64), finite):
+            raise NotImplementedError(
+                "dictionary value table is not float32-exact; numeric "
+                "modifiers would diverge from the host engines")
+    return tuple(spine.project) if spine.project is not None else pipe_cols
+
+
 class PlanExecutor:
     """Builds and runs the jitted static program for a compiled Plan.
 
@@ -274,15 +560,34 @@ class PlanExecutor:
     *presence* is static, their values are not), so every instantiation of
     a query template shares one compiled program — ``run(bounds=...)``
     re-binds without re-tracing.
+
+    ``spine`` appends the query's solution modifiers to the traced
+    program (FILTER masks, on-device projection, sort-based DISTINCT,
+    value-table ORDER BY, static OFFSET/LIMIT window); filter constants
+    ride the runtime ``fconsts`` input the same way scan bounds do, so
+    modifier-bearing templates re-bind without re-tracing too.
     """
 
     bounds_from_plan = staticmethod(bounds_from_plan)
 
-    def __init__(self, plan: Plan, catalog: Catalog, slack: float = 1.5):
+    def __init__(self, plan: Plan, catalog: Catalog, slack: float = 1.5,
+                 spine: Optional[ModifierSpine] = None):
         if plan.empty:
             raise ValueError("cannot build executor for statistics-empty plan")
         self.plan = plan
         self.catalog = catalog
+        self.spine = spine if spine is not None else ModifierSpine()
+        self._pipe_cols = _pipeline_cols(plan)
+        self._out_vars = check_spine(self.spine, self._pipe_cols, catalog)
+        self.filter_slots = filter_const_slots(self.spine.filters)
+        # DISTINCT/ORDER BY sort the whole static buffer; the join caps
+        # are sized for the worst unfiltered join, which would make every
+        # modifier query pay an O(cap log cap) sort over mostly-PAD rows.
+        # Instead the spine starts from its own small capacity slot (an
+        # overflow-checked compact before the sorts, appended to ``caps``
+        # so the retry protocol grows it geometrically when a template's
+        # true result is larger — and the grown cap persists).
+        self._mod_resize = bool(self.spine.distinct or self.spine.order)
         self.tables = []
         self.caps: List[int] = []
         est = 0.0
@@ -296,7 +601,42 @@ class PlanExecutor:
                 scan_est = max(1.0, scan_est * 0.01)
             est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
             self.caps.append(round_up_pow2(int(est * slack) + 8, 16))
+        if self._mod_resize:
+            self.caps.append(_mod_cap_seed(self.spine, self.caps[-1]))
         self._default_bounds = bounds_from_plan(plan)
+
+    def fconsts_from_mapping(self, mapping=None) -> np.ndarray:
+        """Runtime filter-constant vector for one binding: template
+        placeholder ids resolve through ``mapping``, concrete ids pass
+        through — the filter counterpart of ``bounds_from_plan``."""
+        m = mapping or {}
+        return np.asarray([m.get(c, c) for c in self.filter_slots],
+                          dtype=np.int32)
+
+    def _apply_spine(self, b: JBindings, values: jax.Array,
+                     fconsts: jax.Array, caps: Tuple[int, ...]
+                     ) -> Tuple[JBindings, Optional[jax.Array]]:
+        """FILTER* → [resize] → ORDER BY → project → DISTINCT →
+        OFFSET/LIMIT, the canonical host sequence lowered onto the
+        static relation (ordering precedes projection so sort keys
+        outside the SELECT list work, exactly like the host engines).
+        Returns the relation and the resize step's overflow flag (None
+        when the spine needs no sorts)."""
+        sp = self.spine
+        ctr = [0]
+        for expr in sp.filters:
+            b = device_filter(b, expr, values, fconsts, ctr)
+        mod_ovf = None
+        if self._mod_resize:
+            b, mod_ovf = device_resize(b, caps[len(self.plan.steps)])
+        if sp.order:
+            b = device_order(b, sp.order, values)
+        b = device_project(b, self._out_vars)
+        if sp.distinct:
+            b = device_distinct(b)
+        if sp.has_slice:
+            b = device_slice(b, sp.offset, sp.limit)
+        return b, mod_ovf
 
     # -- the traced program --------------------------------------------------
     def _scan_step(self, i: int, meta, table_rows: List[jax.Array],
@@ -353,20 +693,32 @@ class PlanExecutor:
         return acc.data, acc.n, jnp.stack(ovfs)
 
     def _program(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
-                 table_ns: List[jax.Array],
-                 bounds: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 table_ns: List[jax.Array], bounds: jax.Array,
+                 fconsts: jax.Array,
+                 values: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
         global _TRACE_COUNT
         _TRACE_COUNT += 1
-        return self._compose(caps, table_rows, table_ns, bounds, {})
+        data, n, ovfs = self._compose(caps, table_rows, table_ns, bounds, {})
+        b, mod_ovf = self._apply_spine(
+            JBindings(self._pipe_cols, data, n, jnp.asarray(False)),
+            values, fconsts, caps)
+        if mod_ovf is not None:
+            ovfs = jnp.concatenate([ovfs, mod_ovf[None]])
+        return b.data, b.n, ovfs
 
     @functools.cached_property
-    def _device_inputs(self) -> Tuple[List[jax.Array], List[jax.Array]]:
-        """Device-resident padded tables, uploaded ONCE per executor —
-        the hot path must not re-pad and re-transfer O(table) bytes on
-        every launch."""
+    def _device_inputs(self) -> Tuple[List[jax.Array], List[jax.Array],
+                                      jax.Array]:
+        """Device-resident padded tables + the dictionary value table,
+        uploaded ONCE per executor — the hot path must not re-pad and
+        re-transfer O(table) bytes on every launch."""
         rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
         ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
-        return rows, ns
+        vals = self.catalog.dictionary.values \
+            if self.catalog.dictionary is not None \
+            else np.empty(0, dtype=np.float64)
+        values = jnp.asarray(vals.astype(np.float32))
+        return rows, ns, values
 
     @functools.cached_property
     def _jitted(self):
@@ -376,7 +728,8 @@ class PlanExecutor:
     def _program_batched(self, caps: Tuple[int, ...],
                          table_rows: List[jax.Array],
                          table_ns: List[jax.Array],
-                         bounds_b: jax.Array
+                         bounds_b: jax.Array, fconsts_b: jax.Array,
+                         values: jax.Array
                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """B constant-bindings of the template in one program.
 
@@ -417,9 +770,17 @@ class PlanExecutor:
                 if c not in acc_cols:
                     acc_cols.append(c)
 
-        return jax.vmap(
-            lambda b: self._compose(caps, table_rows, table_ns, b, shared)
-        )(bounds_b)
+        def one(b, fc):
+            data, n, ovfs = self._compose(caps, table_rows, table_ns, b,
+                                          shared)
+            jb, mod_ovf = self._apply_spine(
+                JBindings(self._pipe_cols, data, n, jnp.asarray(False)),
+                values, fc, caps)
+            if mod_ovf is not None:
+                ovfs = jnp.concatenate([ovfs, mod_ovf[None]])
+            return jb.data, jb.n, ovfs
+
+        return jax.vmap(one)(bounds_b, fconsts_b)
 
     @functools.cached_property
     def _jitted_batch(self):
@@ -433,17 +794,26 @@ class PlanExecutor:
                 for t in self.tables]
         ns = [jax.ShapeDtypeStruct((), jnp.int32) for _ in self.tables]
         bshape = jax.ShapeDtypeStruct(self._default_bounds.shape, jnp.int32)
-        return self._jitted.lower(caps, rows, ns, bshape)
+        fshape = jax.ShapeDtypeStruct((len(self.filter_slots),), jnp.int32)
+        nv = len(self.catalog.dictionary) \
+            if self.catalog.dictionary is not None else 0
+        vshape = jax.ShapeDtypeStruct((nv,), jnp.float32)
+        return self._jitted.lower(caps, rows, ns, bshape, fshape, vshape)
 
     def run(self, max_retries: int = 8,
-            bounds: Optional[np.ndarray] = None) -> Tuple[np.ndarray, Tuple[str, ...]]:
-        rows, ns = self._device_inputs
+            bounds: Optional[np.ndarray] = None,
+            fconsts: Optional[np.ndarray] = None
+            ) -> Tuple[np.ndarray, Tuple[str, ...]]:
+        rows, ns, values = self._device_inputs
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
         bj = jnp.asarray(b)
+        fc = self.fconsts_from_mapping(None) if fconsts is None else \
+            np.asarray(fconsts, dtype=np.int32).reshape(len(self.filter_slots))
+        fj = jnp.asarray(fc)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, n, ovf = self._jitted(caps, rows, ns, bj)
+            data, n, ovf = self._jitted(caps, rows, ns, bj, fj, values)
             ovf = np.asarray(ovf)
             if not ovf.any():
                 # keep grown caps: a hot template must not pay the
@@ -452,27 +822,36 @@ class PlanExecutor:
                 n = int(n)
                 cols = self._final_cols()
                 return np.asarray(data)[:n], cols
-            caps = tuple(c * 2 if ovf[i] else c for i, c in enumerate(caps))
+            caps = double_caps(caps, ovf, len(self.plan.steps))
         raise RuntimeError("join capacity overflow after retries")
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
+                  fconsts_batch: Optional[Sequence[np.ndarray]] = None,
                   max_retries: int = 8) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of this template's program in ONE
-        XLA launch: the (B, n_steps, 2) bounds stack is the only batched
-        input (tables broadcast), so device work is amortized across the
-        whole micro-batch.  Overflow on *any* batch element retries the
-        whole batch with doubled caps — the batch shares one cap vector,
-        which keeps the program count at one per (caps, B)."""
+        XLA launch: the (B, n_steps, 2) bounds stack and the (B, n_fc)
+        filter-constant stack are the only batched inputs (tables
+        broadcast), so device work is amortized across the whole
+        micro-batch.  Overflow on *any* batch element retries the whole
+        batch with doubled caps — the batch shares one cap vector, which
+        keeps the program count at one per (caps, B)."""
         if not bounds_batch:
             return []
-        rows, ns = self._device_inputs
+        rows, ns, values = self._device_inputs
         shape = self._default_bounds.shape
         bb = np.stack([np.asarray(b, dtype=np.int32).reshape(shape)
                        for b in bounds_batch])
         bj = jnp.asarray(bb)
+        n_fc = len(self.filter_slots)
+        if fconsts_batch is None:
+            fb = np.tile(self.fconsts_from_mapping(None), (len(bb), 1))
+        else:
+            fb = np.stack([np.asarray(f, dtype=np.int32).reshape(n_fc)
+                           for f in fconsts_batch])
+        fj = jnp.asarray(fb)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, n, ovf = self._jitted_batch(caps, rows, ns, bj)
+            data, n, ovf = self._jitted_batch(caps, rows, ns, bj, fj, values)
             ovf = np.asarray(ovf)                # (B, n_steps)
             if not ovf.any():
                 self.caps = list(caps)
@@ -481,15 +860,8 @@ class PlanExecutor:
                 n = np.asarray(n)
                 return [(data[i, : int(n[i])], cols)
                         for i in range(data.shape[0])]
-            step_ovf = ovf.any(axis=0)
-            caps = tuple(c * 2 if step_ovf[i] else c
-                         for i, c in enumerate(caps))
+            caps = double_caps(caps, ovf.any(axis=0), len(self.plan.steps))
         raise RuntimeError("join capacity overflow after retries (batched)")
 
     def _final_cols(self) -> Tuple[str, ...]:
-        cols: List[str] = []
-        for step in self.plan.steps:
-            for v in _step_meta(step)[4]:
-                if v not in cols:
-                    cols.append(v)
-        return tuple(cols)
+        return self._out_vars

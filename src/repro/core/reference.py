@@ -168,13 +168,32 @@ def _distinct(res: List[Mapping]) -> List[Mapping]:
 
 def execute_reference(query: Query, triples: np.ndarray,
                       values: Optional[np.ndarray] = None) -> List[Mapping]:
-    """Evaluate a query by brute force. Returns a bag of mappings."""
+    """Evaluate a query by brute force. Returns a bag of mappings.
+
+    Solution modifiers follow the canonical order shared with the
+    engines (see :mod:`repro.core.modifiers`): the spine is peeled off
+    the root and applied as FILTER* → ORDER BY → project → DISTINCT →
+    OFFSET/LIMIT, with first-occurrence-stable dedup."""
+    from repro.core.modifiers import peel_spine
+
     values = values if values is not None else np.empty(0)
-    res = _eval(query.root, triples, values)
-    if query.select is not None:
-        res = [{v: m.get(v, UNBOUND) for v in query.select} for m in res]
-    if query.distinct:
+    core, spine = peel_spine(query)
+    res = _eval(core, triples, values)
+    for expr in spine.filters:
+        res = [m for m in res if _filter_val(expr, m, values)]
+    for var, asc in reversed(spine.order):   # pre-projection, W3C order
+        def key(m, var=var):
+            tid = m.get(var, UNBOUND)
+            v = float(values[tid]) if 0 <= tid < len(values) else float("nan")
+            return float(tid) if np.isnan(v) else v
+        res = sorted(res, key=key, reverse=not asc)
+    if spine.project is not None:
+        res = [{v: m.get(v, UNBOUND) for v in spine.project} for m in res]
+    if spine.distinct:
         res = _distinct(res)
+    if spine.has_slice:
+        end = None if spine.limit is None else spine.offset + spine.limit
+        res = res[spine.offset:end]
     return res
 
 

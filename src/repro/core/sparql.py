@@ -41,7 +41,12 @@ class SparqlError(ValueError):
 _TOKEN_RE = re.compile(
     r"""
       (?P<ws>\s+|\#[^\n]*)
-    | (?P<iri><[^>]*>)
+    # No whitespace inside an IRI: '?a < 25 && ?b > 5' tokenizes as
+    # comparisons.  A space-free '?a<25&&?b>5' still lexes '<25&&?b>' as
+    # one IRI token (and then errors) — that matches the SPARQL IRIREF
+    # grammar, which real lexers resolve the same way: put spaces around
+    # '<' in filters.
+    | (?P<iri><[^>\s]*>)
     | (?P<str>"(?:[^"\\]|\\.)*")
     | (?P<num>[+-]?\d+(?:\.\d+)?)
     | (?P<var>\?[A-Za-z_][A-Za-z0-9_]*)
@@ -135,11 +140,13 @@ class _Parser:
     def parse_query(self) -> Query:
         while self.accept("PREFIX"):
             kind, val = self.next()
+            # a PREFIX name is exactly "name:" — a pname token whose local
+            # part is empty; anything else (missing colon, stray local
+            # part) is a syntax error, not a silently-garbled prefix
             if kind != "pname" or not val.endswith(":"):
-                # pname token includes the colon only when local part empty
-                if kind != "pname":
-                    raise SparqlError(f"bad PREFIX name {val!r}")
-            pfx = val[:-1] if val.endswith(":") else val.split(":")[0]
+                raise SparqlError(
+                    f"bad PREFIX name {val!r} (expected 'name:')")
+            pfx = val[:-1]
             kind2, iri = self.next()
             if kind2 != "iri":
                 raise SparqlError(f"bad PREFIX iri {iri!r}")
@@ -239,6 +246,8 @@ class _Parser:
                 patterns.append(self.parse_triples_same_subject())
                 # '.' separators / ';' predicate lists handled inside
                 while self.accept(";"):
+                    if self.peek()[1] in (".", "}"):
+                        break               # trailing ';' before '.' or '}'
                     prev = patterns[-1]
                     p = self.parse_term()
                     o = self.parse_term()

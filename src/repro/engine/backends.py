@@ -33,7 +33,10 @@ import numpy as np
 
 from repro.core.algebra import BGP, Query
 from repro.core.compiler import Plan, compile_bgp
-from repro.core.executor import Bindings, execute, execute_plan, _project
+from repro.core.executor import (
+    Bindings, apply_spine_host, execute, execute_plan,
+)
+from repro.core.modifiers import peel_spine, substitute_spine
 from repro.core.stats import Catalog
 from repro.engine.result import Result
 from repro.engine.template import (
@@ -71,6 +74,10 @@ class PreparedQuery:
     #: (padding to a static shape is then worthwhile); the base loop runs
     #: padding slots as real queries, so callers must not pad for it.
     vectorized_batch: bool = False
+    #: True when a device backend could not compile the template and fell
+    #: back to the eager host engine — Engine counts these per request
+    #: (``device_fallbacks``), so silent eager execution is observable.
+    fallback: bool = False
 
     def __init__(self, template: QueryTemplate, ctx: ExecutionContext):
         self.template = template
@@ -101,12 +108,6 @@ class PreparedQuery:
     def _empty(self) -> Result:
         return Result.empty(self.out_cols, self.ctx.dictionary)
 
-    def _finalize(self, b: Bindings) -> Result:
-        b = _project(b, self.query.select)
-        if self.query.distinct:
-            b = Bindings(b.cols, np.unique(b.data, axis=0))
-        return Result(b, self.ctx.dictionary)
-
 
 class _EmptyPrepared(PreparedQuery):
     """Statistics-proven empty template: answered without touching data."""
@@ -121,17 +122,23 @@ class _EmptyPrepared(PreparedQuery):
 
 
 class _EagerPrepared(PreparedQuery):
-    """Host numpy engine.  BGP-rooted queries cache the compiled plan and
-    re-bind scan constants; operator trees (FILTER/OPTIONAL/...) cache the
-    parsed tree and re-bind by id substitution."""
+    """Host numpy engine.  Queries whose modifier spine sits on a BGP
+    core cache the compiled plan + spine and re-bind scan/filter
+    constants by id substitution; other operator trees
+    (OPTIONAL/UNION/...) cache the parsed tree and re-bind through
+    ``substitute_query``."""
 
     backend = "eager"
 
-    def __init__(self, template, ctx):
+    def __init__(self, template, ctx, fallback: bool = False):
         super().__init__(template, ctx)
+        self.fallback = fallback
         self.plan: Optional[Plan] = None
-        if isinstance(self.query.root, BGP) and ctx.layout != "pt":
-            self.plan = compile_bgp(self.query.root, ctx.catalog, ctx.layout)
+        self.spine = None
+        core, spine = peel_spine(self.query)
+        if isinstance(core, BGP) and ctx.layout != "pt":
+            self.plan = compile_bgp(core, ctx.catalog, ctx.layout)
+            self.spine = spine
 
     def run(self, binding: Optional[ConstantBinding] = None) -> Result:
         binding = binding or _NO_BINDING
@@ -141,7 +148,10 @@ class _EagerPrepared(PreparedQuery):
             if self.plan.empty:
                 return self._empty()
             plan = rebind_plan(self.plan, binding.mapping)
-            return self._finalize(execute_plan(plan, self.ctx.catalog))
+            spine = substitute_spine(self.spine, binding.mapping)
+            b = apply_spine_host(execute_plan(plan, self.ctx.catalog), spine,
+                                 self.ctx.catalog)
+            return Result(b, self.ctx.dictionary)
         query = substitute_query(self.query, binding.mapping)
         return Result(execute(query, self.ctx.catalog, layout=self.ctx.layout),
                       self.ctx.dictionary)
@@ -162,13 +172,22 @@ class _VectorizedPrepared(PreparedQuery):
         self.executor = executor
         self.plan: Plan = executor.plan
 
+    def _wrap(self, data: np.ndarray, cols: Tuple[str, ...]) -> Result:
+        # the executor's compiled spine already applied FILTER, the
+        # projection, DISTINCT, ORDER BY and the slice on device — the
+        # host must not re-project or re-dedup (that would destroy the
+        # device-established row order)
+        return Result(Bindings(cols, data), self.ctx.dictionary)
+
     def run(self, binding: Optional[ConstantBinding] = None) -> Result:
         binding = binding or _NO_BINDING
         if binding.missing:
             return self._empty()
         plan = rebind_plan(self.plan, binding.mapping)
-        data, cols = self.executor.run(bounds=self.executor.bounds_from_plan(plan))
-        return self._finalize(Bindings(cols, data))
+        data, cols = self.executor.run(
+            bounds=self.executor.bounds_from_plan(plan),
+            fconsts=self.executor.fconsts_from_mapping(binding.mapping))
+        return self._wrap(data, cols)
 
     def run_batch(self, bindings: List[Optional[ConstantBinding]]
                   ) -> List[Result]:
@@ -176,6 +195,7 @@ class _VectorizedPrepared(PreparedQuery):
         results: List[Optional[Result]] = [None] * len(bindings)
         live: List[int] = []
         bounds: List[np.ndarray] = []
+        fconsts: List[np.ndarray] = []
         for i, b in enumerate(bindings):
             if b.missing:
                 results[i] = self._empty()
@@ -183,15 +203,17 @@ class _VectorizedPrepared(PreparedQuery):
                 live.append(i)
                 bounds.append(self.executor.bounds_from_plan(
                     rebind_plan(self.plan, b.mapping)))
+                fconsts.append(self.executor.fconsts_from_mapping(b.mapping))
         if live:
             # pad back to the caller's (static-bucket) batch size: missing
             # bindings must not shrink B, or each distinct live-count would
             # compile its own program
             while len(bounds) < len(bindings):
                 bounds.append(bounds[-1])
-            outs = self.executor.run_batch(bounds)
+                fconsts.append(fconsts[-1])
+            outs = self.executor.run_batch(bounds, fconsts)
             for i, (data, cols) in zip(live, outs):
-                results[i] = self._finalize(Bindings(cols, data))
+                results[i] = self._wrap(data, cols)
         return results
 
     def lower(self, caps=None):
@@ -237,23 +259,29 @@ class EagerBackend(ExecutionBackend):
 
 
 class JitBackend(ExecutionBackend):
-    """Non-BGP operator trees run on the eager path (same results; BGPs
-    dominate served workloads, cf. paper §2.1), as do TT-layout scans
-    (the device path requires bound predicates)."""
+    """Queries whose modifier spine (FILTER* / DISTINCT / ORDER BY /
+    LIMIT / OFFSET, see :func:`repro.core.modifiers.peel_spine`) sits on
+    a BGP core compile end-to-end into the static-shape device program.
+    Cores the device path cannot express — OPTIONAL/UNION/JoinPair trees,
+    TT-layout scans (unbound predicates) — run on the eager path (same
+    results) and are flagged ``fallback`` so the Engine can count them."""
 
     name = "jit"
 
     def prepare(self, template, ctx):
-        if not isinstance(template.query.root, BGP) or ctx.layout == "pt":
-            return _EagerPrepared(template, ctx)
-        plan = compile_bgp(template.query.root, ctx.catalog, ctx.layout)
+        if ctx.layout == "pt":
+            return _EagerPrepared(template, ctx, fallback=True)
+        core, spine = peel_spine(template.query)
+        if not isinstance(core, BGP):
+            return _EagerPrepared(template, ctx, fallback=True)
+        plan = compile_bgp(core, ctx.catalog, ctx.layout)
         if plan.empty:
             return _EmptyPrepared(template, ctx, self.name)
         from repro.core.jexec import PlanExecutor
         try:
-            ex = PlanExecutor(plan, ctx.catalog)
+            ex = PlanExecutor(plan, ctx.catalog, spine=spine)
         except NotImplementedError:
-            return _EagerPrepared(template, ctx)
+            return _EagerPrepared(template, ctx, fallback=True)
         return _JitPrepared(template, ctx, ex)
 
 
@@ -266,17 +294,21 @@ class DistributedBackend(ExecutionBackend):
     def prepare(self, template, ctx):
         if ctx.mesh is None:
             raise ValueError("distributed backend needs a mesh")
-        if not isinstance(template.query.root, BGP) or ctx.layout == "pt":
-            return _EagerPrepared(template, ctx)
-        plan = compile_bgp(template.query.root, ctx.catalog, ctx.layout)
+        if ctx.layout == "pt":
+            return _EagerPrepared(template, ctx, fallback=True)
+        core, spine = peel_spine(template.query)
+        if not isinstance(core, BGP):
+            return _EagerPrepared(template, ctx, fallback=True)
+        plan = compile_bgp(core, ctx.catalog, ctx.layout)
         if plan.empty:
             return _EmptyPrepared(template, ctx, self.name)
         from repro.core.distributed import DistributedExecutor
         try:
             ex = DistributedExecutor(plan, ctx.catalog, ctx.mesh,
-                                     dual_partition=self.dual_partition)
+                                     dual_partition=self.dual_partition,
+                                     spine=spine)
         except NotImplementedError:
-            return _EagerPrepared(template, ctx)
+            return _EagerPrepared(template, ctx, fallback=True)
         return _DistributedPrepared(template, ctx, ex)
 
 

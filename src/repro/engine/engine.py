@@ -46,6 +46,10 @@ class ServerMetrics:
     rows: int = 0
     empties: int = 0          # zero-row answers, however produced
     short_circuits: int = 0   # answered from statistics alone (no data touched)
+    # requests served through an eager fallback on a device backend (the
+    # prepared query's ``fallback`` flag): silent eager execution was the
+    # failure mode that hid the device path's BGP-only coverage
+    device_fallbacks: int = 0
     plan_hits: int = 0
     plan_misses: int = 0
     latencies_ms: List[float] = field(default_factory=list)
@@ -74,6 +78,7 @@ class ServerMetrics:
             "rows": self.rows,
             "empties": self.empties,
             "short_circuits": self.short_circuits,
+            "device_fallbacks": self.device_fallbacks,
             "plan_hit_rate": self.plan_hits / max(self.plan_hits
                                                   + self.plan_misses, 1),
             "p50_ms": float(np.percentile(lat, 50)),
@@ -223,6 +228,8 @@ class Engine:
         self.metrics.rows += len(res)
         if len(res) == 0:
             self.metrics.empties += 1
+        if getattr(prepared, "fallback", False):
+            self.metrics.device_fallbacks += 1
         plan = getattr(prepared, "plan", None)
         if (plan is not None and plan.empty) or \
                 (binding is not None and binding.missing):

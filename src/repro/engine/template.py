@@ -31,11 +31,11 @@ from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.algebra import (
-    BGP, BoolOp, Bound, Cmp, Distinct, Filter, FilterExpr, JoinPair, LeftJoin,
-    Node, NotExpr, OrderBy, Project, Query, Slice, TriplePattern, UnionOp,
-    is_var, tp_vars,
+    BGP, Distinct, Filter, JoinPair, LeftJoin, Node, OrderBy, Project,
+    Query, Slice, TriplePattern, UnionOp, is_var, tp_vars,
 )
 from repro.core.compiler import Plan, ScanStep
+from repro.core.modifiers import substitute_filter, substitute_term
 from repro.core.sparql import MISSING_TERM, _Parser
 
 __all__ = [
@@ -213,26 +213,15 @@ class QueryTemplate:
 # Substitution: pure id rewrites over trees and plans
 # ---------------------------------------------------------------------------
 
-def _sub_term(t, mapping: Dict[int, int]):
-    if isinstance(t, str) or isinstance(t, float):
-        return t
-    return mapping.get(int(t), t)
+# The id-rewrite primitives live in repro.core.modifiers (engine/ may
+# import core/, not vice versa); these are the historical local names.
+_sub_term = substitute_term
+_sub_expr = substitute_filter
 
 
 def _sub_tp(tp: TriplePattern, mapping: Dict[int, int]) -> TriplePattern:
     return TriplePattern(_sub_term(tp.s, mapping), _sub_term(tp.p, mapping),
                          _sub_term(tp.o, mapping))
-
-
-def _sub_expr(e: FilterExpr, mapping: Dict[int, int]) -> FilterExpr:
-    if isinstance(e, Cmp):
-        return Cmp(e.op, _sub_term(e.lhs, mapping), _sub_term(e.rhs, mapping))
-    if isinstance(e, BoolOp):
-        return BoolOp(e.op, tuple(_sub_expr(a, mapping) for a in e.args))
-    if isinstance(e, NotExpr):
-        return NotExpr(_sub_expr(e.arg, mapping))
-    assert isinstance(e, Bound)
-    return e
 
 
 def _sub_node(node: Node, mapping: Dict[int, int]) -> Node:

@@ -1,13 +1,25 @@
 """Differential test harness: every execution backend (eager / jit /
 distributed) over every build substrate (numpy / jax) and τ must agree
 with the brute-force semantics oracle (``core/reference.py``) on random
-graphs × random BGP/FILTER/OPTIONAL/UNION queries.
+graphs × random BGP/FILTER/OPTIONAL/UNION queries × random solution-
+modifier spines (DISTINCT / ORDER BY / LIMIT / OFFSET / FILTER).
+
+Comparison rules:
+* un-sliced queries: exact multiset equality against the oracle;
+* sliced queries (LIMIT/OFFSET): the row *count* must equal the
+  oracle's and every returned row must come from the oracle's pre-slice
+  bag (with ties, SPARQL does not pin which equal-key rows survive a
+  cut, and the backends may break ties differently than the oracle);
+* jit must match eager ROW FOR ROW on every query — the device modifier
+  pipeline implements the same canonical project → distinct → order →
+  slice sequence with the same stable tie-breaking.
 
 This systematically sweeps the backend × τ × catalog-build surface that
 hand-picked queries cannot cover; it runs under ``_hypothesis_shim``
 (deterministic per-test RNG) when real hypothesis is absent.
 """
 
+import re
 from collections import Counter
 
 import jax
@@ -20,6 +32,7 @@ from repro.core.sparql import parse_sparql
 from repro.engine import Dataset
 
 TAUS = (0.25, 1.0)
+_SLICE_RE = re.compile(r"\s(?:LIMIT|OFFSET)\s+\d+")
 
 
 # ---------------------------------------------------------------------------
@@ -42,13 +55,15 @@ def _random_pattern(rng, subj, obj, n_ent, n_preds):
 
 
 def random_query(rng, n_ent, n_preds):
-    """A random SELECT * query: a chained BGP, optionally wrapped in
-    FILTER / OPTIONAL / UNION (exercised by all backends; non-BGP roots
-    route device backends through their fallback path)."""
+    """A random query: a chained BGP, optionally wrapped in FILTER /
+    OPTIONAL / UNION, under a random solution-modifier spine (DISTINCT /
+    ORDER BY / LIMIT / OFFSET).  BGP cores with modifiers compile onto
+    the device path of the jit/distributed backends; other cores route
+    them through the (counted) eager fallback."""
     n_pat = int(rng.integers(1, 4))
     pats = [_random_pattern(rng, f"?v{i}", f"?v{i + 1}", n_ent, n_preds)
             for i in range(n_pat)]
-    shape = rng.integers(0, 4)
+    shape = rng.integers(0, 5)
     if shape == 0:                      # plain BGP
         body = " . ".join(pats)
     elif shape == 1:                    # FILTER over the chain vars
@@ -56,19 +71,56 @@ def random_query(rng, n_ent, n_preds):
     elif shape == 2:                    # OPTIONAL tail
         opt = _random_pattern(rng, f"?v{n_pat}", "?w", n_ent, n_preds)
         body = " . ".join(pats) + f" OPTIONAL {{ {opt} }}"
-    else:                               # UNION of two chains
+    elif shape == 3:                    # UNION of two chains
         alt = _random_pattern(rng, "?v0", "?v1", n_ent, n_preds)
         body = f"{{ {' . '.join(pats)} }} UNION {{ {alt} }}"
-    return f"SELECT * WHERE {{ {body} }}"
+    else:                               # boolean FILTER combinators
+        body = " . ".join(pats) + \
+            f" FILTER(?v0 != ?v{n_pat} || !(?v0 = ?v1) && BOUND(?v0))"
+
+    distinct = "DISTINCT " if rng.random() < 0.4 else ""
+    tail = ""
+    if rng.random() < 0.5:              # ORDER BY over 1-2 chain vars
+        n_keys = int(rng.integers(1, min(n_pat + 1, 2) + 1))
+        keys = rng.choice(n_pat + 1, size=n_keys, replace=False)
+        tail += " ORDER BY " + " ".join(
+            f"DESC(?v{k})" if rng.random() < 0.5 else f"?v{k}" for k in keys)
+    if rng.random() < 0.4:
+        tail += f" LIMIT {int(rng.integers(0, 8))}"
+        if rng.random() < 0.5:
+            tail += f" OFFSET {int(rng.integers(0, 4))}"
+    elif rng.random() < 0.15:
+        tail += f" OFFSET {int(rng.integers(1, 4))}"
+    return f"SELECT {distinct}* WHERE {{ {body} }}{tail}"
 
 
 def assert_matches_oracle(res, qtext, dictionary, tt, ctx):
     query = parse_sparql(qtext, dictionary)
     ref = execute_reference(query, tt, dictionary.values)
     cols = sorted(res.cols)
-    want = mappings_to_multiset(ref, cols)
     got = dict(res.as_multiset(cols))
-    assert got == want, (ctx, qtext)
+    unsliced = _SLICE_RE.sub("", qtext)
+    if unsliced != qtext:
+        # LIMIT/OFFSET: with ties the engines may legally cut different
+        # rows than the oracle — pin the count and the pre-slice bag
+        assert sum(got.values()) == len(ref), (ctx, qtext)
+        full = mappings_to_multiset(
+            execute_reference(parse_sparql(unsliced, dictionary), tt,
+                              dictionary.values), cols)
+        for row, cnt in got.items():
+            assert cnt <= full.get(row, 0), (ctx, qtext, row)
+    else:
+        want = mappings_to_multiset(ref, cols)
+        assert got == want, (ctx, qtext)
+
+
+def assert_rows_equal(a, b, ctx):
+    """Exact row-for-row equality (order included) over shared cols."""
+    assert set(a.cols) == set(b.cols), (ctx, a.cols, b.cols)
+    cols = sorted(a.cols)
+    da = a.data[:, [a.cols.index(c) for c in cols]]
+    db = b.data[:, [b.cols.index(c) for c in cols]]
+    assert np.array_equal(da, db), (ctx, da, db)
 
 
 # ---------------------------------------------------------------------------
@@ -102,10 +154,16 @@ def test_backends_match_reference(data):
     ]
     for qi in range(3):
         qtext = random_query(rng, n_ent, n_preds)
+        results = {}
         for name, eng in engines:
             res = eng.query(qtext)
+            results[name] = res
             assert_matches_oracle(res, qtext, d, tt,
                                   (seed, tau, name, qi))
+        # the jit modifier pipeline must reproduce eager row-for-row
+        assert_rows_equal(results["jit/numpy-built"],
+                          results["eager/numpy-built"],
+                          (seed, tau, "jit-vs-eager", qtext))
 
 
 def test_differential_fixed_seed_regressions():
@@ -121,14 +179,28 @@ def test_differential_fixed_seed_regressions():
         "SELECT * WHERE { { ?v0 p0 ?v1 . ?v1 p0 ?v2 } UNION { ?v0 p1 ?v1 } }",
         "SELECT * WHERE { e1 p0 ?v1 . ?v1 p1 ?v2 }",
         "SELECT * WHERE { ?v0 p0 e9999 }",     # absent constant: empty
+        # solution-modifier spines over BGP cores (device-compiled)
+        "SELECT DISTINCT ?v1 WHERE { ?v0 p0 ?v1 }",
+        "SELECT * WHERE { ?v0 p0 ?v1 . ?v1 p1 ?v2 } ORDER BY ?v2 DESC(?v0)",
+        "SELECT DISTINCT * WHERE { ?v0 p0 ?v1 FILTER(?v0 != ?v1) } "
+        "ORDER BY ?v0 ?v1 LIMIT 5",
+        "SELECT ?v1 WHERE { ?v0 p0 ?v1 } ORDER BY ?v1 LIMIT 3 OFFSET 2",
+        "SELECT DISTINCT ?v1 WHERE { e1 p0 ?v1 } ORDER BY DESC(?v1) LIMIT 2",
+        # modifier spine over a non-BGP core (counted eager fallback)
+        "SELECT DISTINCT ?v0 WHERE { { ?v0 p0 ?v1 } UNION { ?v0 p1 ?v1 } } "
+        "ORDER BY ?v0 LIMIT 4",
     ]
     mesh = jax.make_mesh((1,), ("data",))
     for tau in TAUS:
         ds = Dataset.from_triples(triples, threshold=tau,
                                   build_backend="jax")
         d, tt = ds.dictionary, ds.catalog.tt
-        for backend in ("eager", "jit", "distributed"):
-            eng = ds.engine(backend, mesh=mesh)
-            for qtext in queries:
+        for qtext in queries:
+            per_backend = {}
+            for backend in ("eager", "jit", "distributed"):
+                eng = ds.engine(backend, mesh=mesh)
                 res = eng.query(qtext)
+                per_backend[backend] = res
                 assert_matches_oracle(res, qtext, d, tt, (tau, backend))
+            assert_rows_equal(per_backend["jit"], per_backend["eager"],
+                              (tau, "jit-vs-eager", qtext))

@@ -1,0 +1,296 @@
+"""Solution-modifier semantics and the device modifier pipeline.
+
+The SPARQL modifier order is ORDER BY → project → DISTINCT →
+OFFSET/LIMIT with an order-preserving DISTINCT.  The pre-fix eager
+engine applied ``np.unique`` dedup *after* ORDER BY and LIMIT had run
+inside the root (destroying the sort order and deduping the truncated
+rows), and the device backends silently fell back to eager for every
+modifier-bearing query — these tests pin the fixed semantics row-for-row
+against hand-computed oracles on all three backends, and pin the jit
+path's compile-once behaviour through the modifier chain.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import jexec
+from repro.core.modifiers import peel_spine
+from repro.core.sparql import SparqlError, parse_sparql
+from repro.engine import Dataset
+
+# prices: p1=30, p2=10, p3=20, p4=10  (dictionary ids in insertion order)
+TRIPLES = [
+    ("ex:p1", "ex:price", '"30"'),
+    ("ex:p2", "ex:price", '"10"'),
+    ("ex:p3", "ex:price", '"20"'),
+    ("ex:p4", "ex:price", '"10"'),
+    ("ex:u1", "ex:likes", "ex:p1"),
+    ("ex:u1", "ex:likes", "ex:p2"),
+    ("ex:u2", "ex:likes", "ex:p2"),
+    ("ex:u2", "ex:likes", "ex:p3"),
+    ("ex:u1", "ex:likes", "ex:p4"),
+]
+
+BACKENDS = ("eager", "jit", "distributed")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return Dataset.from_triples(TRIPLES)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def engine(ds, mesh, backend):
+    return ds.engine(backend, mesh=mesh if backend == "distributed" else None)
+
+
+def ids(ds, *terms):
+    return [ds.dictionary.id_of(t) for t in terms]
+
+
+# ---------------------------------------------------------------------------
+# Modifier-ordering regression (fails on the pre-fix execute())
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_distinct_order_limit_regression(ds, mesh, backend):
+    """DISTINCT must dedup BEFORE the limit and preserve the order:
+    prices {30, 10, 20, 10} → distinct {30,10,20} → asc {10,20,30} →
+    LIMIT 2 = [10, 20].  The pre-fix pipeline ordered+limited first
+    ([10, 10]) and then np.unique'd ([10]): one wrong row."""
+    eng = engine(ds, mesh, backend)
+    res = eng.query("SELECT DISTINCT ?x WHERE { ?p ex:price ?x } "
+                    "ORDER BY ?x LIMIT 2")
+    want = np.array(ids(ds, '"10"', '"20"'), dtype=np.int32).reshape(2, 1)
+    assert res.cols == ("?x",)
+    assert np.array_equal(res.data, want), (backend, res.data, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_desc_order_survives_distinct(ds, mesh, backend):
+    eng = engine(ds, mesh, backend)
+    res = eng.query("SELECT DISTINCT ?x WHERE { ?p ex:price ?x } "
+                    "ORDER BY DESC(?x) LIMIT 2")
+    want = np.array(ids(ds, '"30"', '"20"'), dtype=np.int32).reshape(2, 1)
+    assert np.array_equal(res.data, want), (backend, res.data, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_offset_window(ds, mesh, backend):
+    """ORDER BY ?x ?u over (u, x) pairs: [(u1,10),(u1,10),(u2,10),
+    (u2,20),(u1,30)]; OFFSET 1 LIMIT 2 → [(u1,10),(u2,10)]."""
+    eng = engine(ds, mesh, backend)
+    res = eng.query("SELECT ?u ?x WHERE { ?u ex:likes ?p . ?p ex:price ?x } "
+                    "ORDER BY ?x ?u LIMIT 2 OFFSET 1")
+    u1, u2, v10 = ids(ds, "ex:u1", "ex:u2", '"10"')
+    want = np.array([[u1, v10], [u2, v10]], dtype=np.int32)
+    assert res.cols == ("?u", "?x")
+    assert np.array_equal(res.data, want), (backend, res.data, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_distinct_is_first_occurrence_stable(ds, mesh, backend):
+    """Without ORDER BY, DISTINCT keeps the first occurrence in pipeline
+    order (subject-sorted price table → x = [30, 10, 20, 10])."""
+    eng = engine(ds, mesh, backend)
+    res = eng.query("SELECT DISTINCT ?x WHERE { ?p ex:price ?x }")
+    want = np.array(ids(ds, '"30"', '"10"', '"20"'),
+                    dtype=np.int32).reshape(3, 1)
+    assert np.array_equal(res.data, want), (backend, res.data, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_limit_zero_and_offset_past_end(ds, mesh, backend):
+    eng = engine(ds, mesh, backend)
+    assert len(eng.query("SELECT ?x WHERE { ?p ex:price ?x } LIMIT 0")) == 0
+    assert len(eng.query("SELECT ?x WHERE { ?p ex:price ?x } OFFSET 99")) == 0
+
+
+# ---------------------------------------------------------------------------
+# FILTER on the device path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+@pytest.mark.parametrize("qtext", [
+    "SELECT * WHERE { ?u ex:likes ?p . ?p ex:price ?x FILTER(?x < 25) }",
+    "SELECT * WHERE { ?u ex:likes ?p . ?p ex:price ?x "
+    "FILTER(?x < 25 && ?x > 5) }",
+    "SELECT ?u WHERE { ?u ex:likes ?p . ?p ex:price ?x "
+    "FILTER(!(?x = 10) || BOUND(?u)) }",
+    "SELECT ?u ?x WHERE { ?u ex:likes ?p . ?p ex:price ?x "
+    "FILTER(?u != ex:u2) } ORDER BY DESC(?x)",
+    "SELECT DISTINCT ?x WHERE { ?u ex:likes ?p . ?p ex:price ?x "
+    "FILTER(?x >= 10) } ORDER BY ?x OFFSET 1",
+])
+def test_device_filter_matches_eager_row_for_row(ds, mesh, backend, qtext):
+    got = engine(ds, mesh, backend).query(qtext)
+    ref = engine(ds, mesh, "eager").query(qtext)
+    assert got.cols == ref.cols
+    assert np.array_equal(got.data, ref.data), (backend, qtext, got.data,
+                                                ref.data)
+
+
+def test_jit_modifier_query_compiles_once(ds, mesh):
+    """A FILTER + DISTINCT + ORDER BY + LIMIT template prepares onto the
+    device path (no eager fallback) and compiles once per (template,
+    batch shape): constant re-binding and repeated batches re-use the
+    program."""
+    eng = ds.engine("jit")
+    eager = ds.engine("eager")
+
+    def q(u):
+        return (f"SELECT DISTINCT ?x WHERE {{ ex:u{u} ex:likes ?p . "
+                f"?p ex:price ?x FILTER(?x > 5) }} ORDER BY DESC(?x) LIMIT 2")
+
+    prepared = eng.prepare(q(1))
+    assert prepared.backend == "jit" and not prepared.fallback
+    core, spine = peel_spine(prepared.template.query)
+    assert spine.distinct and spine.order and spine.limit == 2 and spine.filters
+
+    t0 = jexec.trace_count()
+    r1 = eng.query(q(1))
+    traces_after_first = jexec.trace_count()
+    assert traces_after_first > t0          # first run compiles
+    r2 = eng.query(q(2))
+    assert jexec.trace_count() == traces_after_first   # re-bind: no re-trace
+    for u, r in ((1, r1), (2, r2)):
+        ref = eager.query(q(u))
+        assert np.array_equal(r.data, ref.data), (u, r.data, ref.data)
+
+    # batched: one compile per bucket shape, none for a repeat batch
+    t1 = jexec.trace_count()
+    outs = eng.query_batch([q(1), q(2), q(1), q(2)])
+    assert jexec.trace_count() == t1 + 1
+    outs2 = eng.query_batch([q(2), q(2), q(1), q(1)])
+    assert jexec.trace_count() == t1 + 1
+    for u, r in zip((2, 2, 1, 1), outs2):
+        assert np.array_equal(r.data, eager.query(q(u)).data)
+
+
+def test_distributed_modifier_batch_matches_eager(ds, mesh):
+    eng = ds.engine("distributed", mesh=mesh)
+    eager = ds.engine("eager")
+
+    def q(u):
+        return (f"SELECT DISTINCT ?x WHERE {{ ex:u{u} ex:likes ?p . "
+                f"?p ex:price ?x }} ORDER BY ?x LIMIT 3")
+
+    outs = eng.query_batch([q(1), q(2), q(1)])
+    for u, r in zip((1, 2, 1), outs):
+        ref = eager.query(q(u))
+        assert np.array_equal(r.data, ref.data), (u, r.data, ref.data)
+
+
+def test_missing_constant_still_short_circuits(ds, mesh):
+    for backend in BACKENDS:
+        eng = engine(ds, mesh, backend)
+        res = eng.query("SELECT DISTINCT ?x WHERE { ex:u999 ex:likes ?p . "
+                        "?p ex:price ?x } ORDER BY ?x LIMIT 2")
+        assert len(res) == 0, backend
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_order_by_unprojected_variable(ds, mesh, backend):
+    """ORDER BY runs before projection (W3C §18.2.4): sorting by a
+    variable outside the SELECT list must still order the rows."""
+    eng = engine(ds, mesh, backend)
+    res = eng.query("SELECT ?p WHERE { ?p ex:price ?x } ORDER BY DESC(?x)")
+    want = np.array(ids(ds, "ex:p1", "ex:p3", "ex:p2", "ex:p4"),
+                    dtype=np.int32).reshape(4, 1)     # 30, 20, 10, 10
+    assert res.cols == ("?p",)
+    assert np.array_equal(res.data, want), (backend, res.data, want)
+
+
+def test_non_float32_exact_values_fall_back(mesh):
+    """Numeric modifiers gather the value table as float32 on device;
+    a table that is not float32-exact must fall back to eager (counted)
+    rather than silently diverge (2**24 + 1 is the first such int)."""
+    big = Dataset.from_triples([("ex:a", "ex:p", '"16777217"'),
+                                ("ex:b", "ex:p", '"16777216"')])
+    for backend in BACKENDS[1:]:
+        eng = engine(big, mesh, backend)
+        res = eng.query("SELECT ?s WHERE { ?s ex:p ?x "
+                        "FILTER(?x > 16777216) }")
+        assert res.to_terms() == [{"?s": "ex:a"}], (backend, res.to_terms())
+        assert eng.metrics.device_fallbacks == 1, backend
+        # identity filters don't read values: they stay on device
+        res2 = eng.query("SELECT ?s WHERE { ?s ex:p ?x "
+                         "FILTER(?s != ex:b) }")
+        assert res2.to_terms() == [{"?s": "ex:a"}], (backend, res2.to_terms())
+        assert eng.metrics.device_fallbacks == 1, backend
+
+
+# ---------------------------------------------------------------------------
+# Fallback observability
+# ---------------------------------------------------------------------------
+
+def test_device_fallback_counter(ds, mesh):
+    eng = ds.engine("jit")
+    eng.query("SELECT ?x WHERE { ?p ex:price ?x } ORDER BY ?x LIMIT 1")
+    assert eng.metrics.device_fallbacks == 0      # modifiers stay on device
+    eng.query("SELECT * WHERE { ?u ex:likes ?p OPTIONAL { ?p ex:price ?x } }")
+    assert eng.metrics.device_fallbacks == 1      # OPTIONAL core falls back
+    assert eng.metrics.summary()["device_fallbacks"] == 1
+    # the eager backend is never a "fallback"
+    e = ds.engine("eager")
+    e.query("SELECT * WHERE { ?u ex:likes ?p OPTIONAL { ?p ex:price ?x } }")
+    assert e.metrics.device_fallbacks == 0
+
+
+def test_eager_caches_plan_for_modifier_spines(ds):
+    """Modifier-bearing BGP cores take the compiled-plan path on eager
+    (no per-request re-parse/re-compile), not the substitute_query path."""
+    eng = ds.engine("eager")
+    prepared = eng.prepare(
+        "SELECT DISTINCT ?x WHERE { ?p ex:price ?x FILTER(?x > 5) } "
+        "ORDER BY ?x LIMIT 2")
+    assert prepared.plan is not None and not prepared.plan.empty
+    assert prepared.spine is not None and prepared.spine.distinct
+
+
+# ---------------------------------------------------------------------------
+# Parser regressions
+# ---------------------------------------------------------------------------
+
+def test_prefix_without_colon_raises(ds):
+    with pytest.raises(SparqlError):
+        parse_sparql("PREFIX ex <http://e/> SELECT * WHERE { ?s ?p ?o }",
+                     ds.dictionary)
+
+
+def test_prefix_with_local_part_raises(ds):
+    # previously accepted silently (prefix mangled to 'ex')
+    with pytest.raises(SparqlError):
+        parse_sparql("PREFIX ex:x <http://e/> "
+                     "SELECT * WHERE { ?s ex:likes ?o }", ds.dictionary)
+
+
+def test_valid_prefix_still_parses(ds):
+    q = parse_sparql("PREFIX foo: <ex:> "
+                     "SELECT * WHERE { ?u foo:likes ?p }", ds.dictionary)
+    assert q.root.patterns[0].p == ds.dictionary.id_of("ex:likes")
+
+
+@pytest.mark.parametrize("qtext", [
+    "SELECT * WHERE { ?u ex:likes ?a ; ex:likes ?b ; . }",
+    "SELECT * WHERE { ?u ex:likes ?a ; ex:likes ?b ; }",
+])
+def test_trailing_semicolon_in_predicate_list(ds, qtext):
+    q = parse_sparql(qtext, ds.dictionary)
+    ref = parse_sparql("SELECT * WHERE { ?u ex:likes ?a ; ex:likes ?b }",
+                       ds.dictionary)
+    assert q.root.patterns == ref.root.patterns
+
+
+def test_lt_comparison_before_later_gt(ds):
+    """'?x < 25 && ?x > 5' must tokenize as comparisons, not as one
+    '< ... >' IRI (IRIs contain no whitespace)."""
+    q = parse_sparql("SELECT * WHERE { ?p ex:price ?x "
+                     "FILTER(?x < 25 && ?x > 5) }", ds.dictionary)
+    core, spine = peel_spine(q)
+    assert len(spine.filters) == 1
