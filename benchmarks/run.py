@@ -13,7 +13,8 @@ from __future__ import annotations
 import argparse
 
 from benchmarks import common, modifier_queries, sec74_threshold, \
-    serve_throughput, table2_load, table3_st, table4_basic, table5_il
+    serve_throughput, store_load, table2_load, table3_st, table4_basic, \
+    table5_il
 from benchmarks.common import Csv
 
 TABLES = {
@@ -24,6 +25,7 @@ TABLES = {
     "sec74": sec74_threshold.run,
     "serve": serve_throughput.run,   # writes BENCH_serve_throughput.json
     "modifiers": modifier_queries.run,  # writes BENCH_modifier_queries.json
+    "store": store_load.run,         # writes BENCH_store_load.json
 }
 
 

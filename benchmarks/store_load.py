@@ -1,0 +1,120 @@
+"""Cold-start benchmark: booting from the persistent columnar store vs
+re-running the full build pipeline (the lifecycle S2RDF's persist-once /
+query-many design buys, paper §4–§5).
+
+Three cold-start paths over the same WatDiv graph, best-of-N seconds:
+
+* ``rebuild``     — ``build_catalog`` from the raw triples table (VP +
+                    the full semi-join grid), i.e. the pre-store boot;
+* ``load (lazy)`` — ``Dataset.load``: manifest + dictionary parse only,
+                    column files memory-mapped on first touch;
+* ``load (eager)``— ``Dataset.load(eager=True)``: every column file read
+                    into RAM up front.
+
+Also times the first query after a lazy boot (the "fault-in" cost the
+laziness defers).  Emits ``BENCH_store_load.json`` and **asserts the
+lazy load is ≥5x faster than the rebuild** at the bench scale — the
+store's reason to exist.
+
+    PYTHONPATH=src:. python benchmarks/store_load.py --scale 5.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict
+
+from benchmarks import common
+from benchmarks.common import Csv
+
+DEFAULT_OUT = "BENCH_store_load.json"
+THRESHOLD = 0.25
+MIN_SPEEDUP = 5.0
+_QUERY = "SELECT * WHERE { ?u wsdbm:follows ?v . ?v sorg:email ?e }"
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(scale: float = 5.0, csv: Csv = None, repeats: int = 3,
+        out: str = DEFAULT_OUT) -> Dict:
+    from repro.core.stats import build_catalog
+    from repro.engine import Dataset
+
+    csv = csv or Csv()
+    tt, d, sch = common.dataset(scale)
+    ds = Dataset(catalog=build_catalog(tt, d, threshold=THRESHOLD),
+                 dictionary=d, schema=sch)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store = os.path.join(tmp, "watdiv.store")
+        ds.save(store)
+        store_bytes = ds.storage_report()["store_bytes"]
+
+        rebuild_s = _best(
+            lambda: build_catalog(tt, d, threshold=THRESHOLD), repeats)
+        lazy_s = _best(lambda: Dataset.load(store), repeats)
+        eager_s = _best(lambda: Dataset.load(store, eager=True), repeats)
+
+        # fault-in: first query on a freshly lazy-loaded dataset
+        cold = Dataset.load(store)
+        t0 = time.perf_counter()
+        n_rows = len(cold.engine("eager").query(_QUERY))
+        first_query_s = time.perf_counter() - t0
+
+    speedup_lazy = rebuild_s / max(lazy_s, 1e-9)
+    speedup_eager = rebuild_s / max(eager_s, 1e-9)
+    result = {
+        "scale": scale, "threshold": THRESHOLD,
+        "n_triples": int(ds.n_triples),
+        "store_bytes": int(store_bytes),
+        "rebuild_seconds": rebuild_s,
+        "load_lazy_seconds": lazy_s,
+        "load_eager_seconds": eager_s,
+        "first_query_seconds": first_query_s,
+        "first_query_rows": int(n_rows),
+        "speedup_lazy": speedup_lazy,
+        "speedup_eager": speedup_eager,
+        "min_speedup": MIN_SPEEDUP,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    csv.add("store_rebuild", rebuild_s, f"{ds.n_triples}_triples")
+    csv.add("store_load_lazy", lazy_s, f"{speedup_lazy:.1f}x")
+    csv.add("store_load_eager", eager_s, f"{speedup_eager:.1f}x")
+    csv.add("store_first_query", first_query_s, f"{n_rows}_rows")
+
+    assert speedup_lazy >= MIN_SPEEDUP, (
+        f"lazy store cold-start is only {speedup_lazy:.1f}x faster than a "
+        f"build_catalog rebuild (need >= {MIN_SPEEDUP}x at scale {scale})")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=5.0)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    csv = Csv()
+    result = run(scale=args.scale, csv=csv, repeats=args.repeats,
+                 out=args.out)
+    print("name,us_per_call,derived")
+    csv.emit()
+    print(f"lazy cold-start speedup over rebuild: "
+          f"{result['speedup_lazy']:.1f}x -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.table import Table, round_up_pow2
+from repro.core.table import LazyTableMap, Table, round_up_pow2
 from repro.core.vp import (
     ExtVPBuild, KINDS, OS, SO, SS, _ranges_disjoint, _semijoin_mask,
 )
@@ -372,13 +372,14 @@ def incremental_pairs(old: ExtVPBuild, old_vp: Dict[int, Table],
     out = ExtVPBuild(threshold=threshold, backend=backend,
                      kinds=tuple(kinds))
     recompute: List[Key] = []
+    carried: List[Key] = []
     reused = range_skipped = 0
 
     def carry(key: Key) -> None:
         out.sf[key] = old.sf[key]
         out.sizes[key] = old.sizes[key]
         if key in old.tables:
-            out.tables[key] = old.tables[key]
+            carried.append(key)
 
     for key in all_pair_keys(sorted(new_vp), kinds):
         kind, p1, p2 = key
@@ -411,7 +412,22 @@ def incremental_pairs(old: ExtVPBuild, old_vp: Dict[int, Table],
                                        pair_batch=pair_batch)
     out.sf.update(sf)
     out.sizes.update(sizes)
-    out.tables.update(tables)
+    # Carried-over tables must not be forced out of a lazy provider
+    # (a store-backed catalog memory-maps them on demand): when the old
+    # provider can hand out raw loaders, the merged result stays lazy —
+    # carried keys keep their loaders, recomputed ones bind concrete
+    # Tables — so delta replay cost scales with the journal, not with
+    # the number of materialized ExtVP tables.
+    loader_for = getattr(old.tables, "loader_for", None)
+    if loader_for is not None:
+        loaders = {key: loader_for(key) for key in carried}
+        loaders.update({key: (lambda t: lambda: t)(t)
+                        for key, t in tables.items()})
+        out.tables = LazyTableMap(
+            loaders, lengths={key: out.sizes[key] for key in loaders})
+    else:
+        out.tables.update({key: old.tables[key] for key in carried})
+        out.tables.update(tables)
     out.n_semijoins = len(evals)
     report = {"pairs": reused + range_skipped + len(recompute),
               "reused": reused, "range_skipped": range_skipped,

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -30,15 +30,27 @@ __all__ = ["Catalog", "build_catalog"]
 
 Key = Tuple[str, int, int]
 
+#: the shared SF=0 fallback relation — ``Catalog.table()`` hands this
+#: singleton out instead of allocating a fresh empty Table per call
+_EMPTY_TABLE = Table(np.empty((0, 2), dtype=np.int32))
+
 
 @dataclass
 class Catalog:
-    tt: np.ndarray                      # int32[N, 3]
-    vp: Dict[int, Table]
+    """``vp`` and ``extvp.tables`` are *table providers*: any
+    ``Mapping[key, Table]``.  In-RAM builds use plain dicts; stores
+    loaded from disk use :class:`~repro.core.table.LazyTableMap`, whose
+    values memory-map their column files on first touch — callers must
+    not assume dict mutability (copy before mutating, as
+    ``Dataset.append_triples`` does)."""
+
+    tt: np.ndarray                      # int32[N, 3] (may be a memmap)
+    vp: Mapping[int, Table]
     extvp: ExtVPBuild
     dictionary: object = None           # Optional[repro.rdf.Dictionary]
     vp_build_seconds: float = 0.0
     with_extvp: bool = True             # False: VP-only store (no pair stats)
+    store: object = None                # Optional[repro.store.StoreInfo]
 
     # ---- statistics API (what Algorithms 1 & 4 consume) --------------------
     def sf(self, kind: str, p1: int, p2: int) -> float:
@@ -75,7 +87,7 @@ class Catalog:
             return t
         sf = self.extvp.sf.get((kind, p1, p2), 1.0)
         if sf == 0.0:
-            return Table(np.empty((0, 2), dtype=np.int32))
+            return _EMPTY_TABLE
         return self.vp[p1]
 
     @property
@@ -84,7 +96,11 @@ class Catalog:
 
     # ---- storage accounting (paper Table 2) ---------------------------------
     def storage_report(self) -> Dict[str, float]:
-        vp_tuples = sum(len(t) for t in self.vp.values())
+        # never force a lazy provider's loaders just to count tuples —
+        # LazyTableMap answers from its manifest-sourced length metadata
+        total_rows = getattr(self.vp, "total_rows", None)
+        vp_tuples = int(total_rows()) if total_rows is not None \
+            else sum(len(t) for t in self.vp.values())
         ext_tuples = self.extvp.total_tuples()
         return {
             "n_triples": float(len(self.tt)),
@@ -98,6 +114,10 @@ class Catalog:
             "vp_build_seconds": self.vp_build_seconds,
             "extvp_build_seconds": self.extvp.build_seconds,
             "n_semijoins": float(self.extvp.n_semijoins),
+            # persisted form (0 when the catalog has no on-disk store)
+            "store_bytes": float(self.store.total_bytes) if self.store else 0.0,
+            "delta_segments": float(self.store.delta_segments)
+            if self.store else 0.0,
         }
 
 

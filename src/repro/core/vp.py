@@ -81,6 +81,11 @@ class ExtVPBuild:
         return sum(1 for v in self.sf.values() if lo < v <= hi and v < 1.0)
 
     def total_tuples(self) -> int:
+        # lazy table providers answer from their length metadata so
+        # accounting never forces a load (see table.LazyTableMap)
+        total_rows = getattr(self.tables, "total_rows", None)
+        if total_rows is not None:
+            return int(total_rows())
         return sum(len(t) for t in self.tables.values())
 
 

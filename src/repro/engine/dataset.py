@@ -18,10 +18,16 @@ instances bound to any registered execution backend.
         "SELECT * WHERE { wsdbm:User1 wsdbm:follows ?v }",
         "SELECT * WHERE { wsdbm:User2 wsdbm:follows ?v }",
     ])
+
+    # persist once, boot forever (repro.store): save() writes the
+    # on-disk columnar store, load() memory-maps it lazily — no rebuild
+    ds.save("watdiv.store")
+    ds = Dataset.load("watdiv.store")
 """
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional, Tuple
@@ -52,6 +58,9 @@ class Dataset:
     dictionary: object = None          # repro.rdf.Dictionary
     schema: object = None              # Optional[WatDivSchema]
     build_backend: str = "numpy"
+    #: directory of the on-disk store this dataset is attached to (set by
+    #: :meth:`load` / :meth:`save`); appends journal delta segments there
+    store_path: Optional[str] = field(default=None, repr=False)
     _engines: Dict[tuple, Engine] = field(default_factory=dict, repr=False)
     #: accounting of the last append_triples call (pairs reused vs rebuilt)
     last_append_report: Optional[Dict[str, int]] = field(default=None,
@@ -112,7 +121,7 @@ class Dataset:
     # -- incremental load ------------------------------------------------------
     def append_triples(self, triples: Iterable[Tuple[str, str, str]],
                        build_backend: Optional[str] = None,
-                       mesh=None) -> Dict[str, int]:
+                       mesh=None, journal: bool = True) -> Dict[str, int]:
         """Append (s, p, o) string triples and incrementally refresh the
         store: only the VP tables of predicates that received rows are
         rebuilt, and only the ExtVP pairs those predicates touch — or
@@ -124,6 +133,13 @@ class Dataset:
         Cached engines are invalidated (their prepared plans scan the old
         tables); re-fetch them via :meth:`engine` afterwards.  Returns the
         pair-accounting report, also kept as ``last_append_report``.
+
+        When the dataset is attached to an on-disk store (``store_path``
+        set by :meth:`load` / :meth:`save`), the appended triples are
+        additionally journaled as a delta segment so the next
+        :meth:`load` replays them through this same incremental path;
+        ``journal=False`` suppresses that (used by replay itself).
+        ``compact()`` folds accumulated segments back into the base.
         """
         triples = list(triples)
         backend = build_backend or self.build_backend
@@ -165,10 +181,80 @@ class Dataset:
         self.catalog = Catalog(tt=tt, vp=vp, extvp=ext,
                                dictionary=self.dictionary,
                                vp_build_seconds=vp_secs,
-                               with_extvp=cat.with_extvp)
+                               with_extvp=cat.with_extvp,
+                               store=cat.store)
         self._engines.clear()
         self.last_append_report = report
+        if journal and self.store_path is not None:
+            from repro.store import append_segment, delta_stats
+            append_segment(self.store_path, triples)
+            if self.catalog.store is not None:
+                n, nbytes = delta_stats(self.store_path)
+                self.catalog.store.delta_segments = n
+                self.catalog.store.bytes_by_section["delta"] = nbytes
         return report
+
+    # -- persistence (repro.store) ---------------------------------------------
+    def save(self, path: Optional[str] = None) -> str:
+        """Persist the catalog as an on-disk columnar store at ``path``
+        (defaults to the attached ``store_path``).
+
+        Writes the versioned manifest, the dictionary, and raw
+        little-endian column files for TT / every VP table / every
+        materialized ExtVP table via the streaming writer
+        (:func:`repro.store.write_store`), then clears any delta journal
+        at the target — the rewritten base supersedes it.  The dataset
+        becomes attached to ``path``: later :meth:`append_triples` calls
+        journal there and :meth:`load` restores this exact state.
+        """
+        path = os.fspath(path) if path is not None else self.store_path
+        if path is None:
+            raise ValueError("no path: pass save(path) or load the dataset "
+                             "from a store first")
+        from repro.store import (StoreInfo, clear_segments, section_bytes,
+                                 write_store)
+        manifest = write_store(self.catalog, self.dictionary, path,
+                               build_backend=self.build_backend)
+        clear_segments(path)
+        self.catalog.store = StoreInfo(
+            path=path, bytes_by_section=section_bytes(manifest, path),
+            delta_segments=0)
+        self.store_path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str, eager: bool = False, verify: bool = False,
+             build_backend: str = "numpy", mesh=None) -> "Dataset":
+        """Boot a dataset from an on-disk store — no build pipeline runs.
+
+        The base catalog comes up **lazy and zero-copy** by default:
+        only the manifest (statistics + dictionary) is parsed, and each
+        table ``np.memmap``-s its column file on first touch.
+        ``eager=True`` materializes everything now (benchmarking / tail-
+        latency mode); ``verify=True`` CRC-checks each file when it is
+        first read.  Any journaled delta segments are then replayed
+        through :meth:`append_triples` (the incremental semi-join path),
+        so the result is equivalent to the pre-restart catalog.
+        """
+        from repro.store import load_catalog, read_segments
+        path = os.fspath(path)
+        cat, dictionary = load_catalog(path, eager=eager, verify=verify)
+        ds = cls(catalog=cat, dictionary=dictionary,
+                 build_backend=build_backend, store_path=path)
+        for seg in read_segments(path):
+            ds.append_triples(seg.triples, build_backend=build_backend,
+                              mesh=mesh, journal=False)
+        return ds
+
+    def compact(self) -> str:
+        """Fold the delta journal into the base store: rewrite the full
+        columnar base from the current (already replayed/appended)
+        catalog and drop the segments.  Restores O(manifest) cold-start
+        after a burst of appends."""
+        if self.store_path is None:
+            raise ValueError("dataset is not attached to a store; "
+                             "call save(path) first")
+        return self.save(self.store_path)
 
     # -- engines --------------------------------------------------------------
     def engine(self, backend: str = "eager", layout: str = "extvp",

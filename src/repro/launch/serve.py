@@ -2,6 +2,9 @@
 over the distributed engine, or LM decode serving for the assigned archs.
 
     PYTHONPATH=src python -m repro.launch.serve --mode sparql --scale 1.0
+    PYTHONPATH=src python -m repro.launch.serve --mode sparql \
+        --store watdiv.store        # persist on first run, boot from the
+                                    # store (no build pipeline) afterwards
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen1.5-0.5b
 """
 
@@ -21,8 +24,23 @@ from repro.models.api import Model
 def serve_sparql(args) -> None:
     from repro.engine import Dataset
     from repro.rdf.workloads import ST_QUERIES
+    from repro.store import is_store
 
-    ds = Dataset.watdiv(scale=args.scale, seed=0, threshold=0.25)
+    t0 = time.perf_counter()
+    if args.store and is_store(args.store):
+        # persistent-store boot: manifest + lazy memmaps, the build
+        # pipeline (build_catalog / build_extvp) never runs
+        ds = Dataset.load(args.store, eager=args.eager_load)
+        print(f"cold start from store {args.store!r} in "
+              f"{time.perf_counter() - t0:.3f}s "
+              f"({'eager' if args.eager_load else 'lazy memmap'})")
+    else:
+        ds = Dataset.watdiv(scale=args.scale, seed=0, threshold=0.25)
+        if args.store:
+            ds.save(args.store)
+            print(f"built and persisted store {args.store!r} in "
+                  f"{time.perf_counter() - t0:.3f}s "
+                  "(next boot loads it without rebuilding)")
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
     engine = ds.engine(args.backend, mesh=mesh if args.backend == "distributed"
                        else None)
@@ -66,6 +84,13 @@ def main() -> None:
     ap.add_argument("--backend", default="distributed",
                     help="ExecutionBackend registry key (eager/jit/distributed)")
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--store", default=None,
+                    help="persistent catalog store directory: boot from it "
+                         "when it exists (no build pipeline), else build "
+                         "once and persist there")
+    ap.add_argument("--eager-load", action="store_true",
+                    help="materialize every table at boot instead of lazy "
+                         "memory-mapping (see docs/serving.md)")
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)

@@ -63,6 +63,28 @@ class Dictionary:
     def add_all(self, terms: Iterable[str]) -> np.ndarray:
         return np.asarray([self.add(t) for t in terms], dtype=np.int32)
 
+    @classmethod
+    def from_terms(cls, terms: Sequence[str],
+                   values: Optional[Sequence[float]] = None) -> "Dictionary":
+        """Rebuild a dictionary from an id-ordered term list (the store
+        loader's path, :mod:`repro.store.reader`).  ``values`` is the
+        persisted float64 numeric-value table; when absent it is
+        recomputed term by term — passing it skips the string parsing
+        and guarantees bit-identical values (NaN payloads included)."""
+        d = cls()
+        d.id_to_term = list(terms)
+        d.term_to_id = {t: i for i, t in enumerate(d.id_to_term)}
+        if len(d.term_to_id) != len(d.id_to_term):
+            raise ValueError("duplicate terms in id-ordered term list")
+        if values is None:
+            d._values = [_try_float(t) for t in d.id_to_term]
+        else:
+            if len(values) != len(d.id_to_term):
+                raise ValueError(
+                    f"value table length {len(values)} != {len(d.id_to_term)} terms")
+            d._values = [float(v) for v in values]
+        return d
+
     # -- lookup --------------------------------------------------------------
     def __len__(self) -> int:
         return len(self.id_to_term)

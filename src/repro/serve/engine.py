@@ -29,7 +29,8 @@ stable serving-layer entry point:
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import os
+from typing import List, Optional, Sequence, Union
 
 from repro.core.stats import Catalog
 from repro.engine import (
@@ -49,20 +50,34 @@ class SparqlServer:
     queue in front; kept for serving-layer ergonomics and backwards
     compatibility.  Batching knobs (``max_batch``, ``flush_ms``,
     ``batch_shapes``) are documented in docs/serving.md.
+
+    ``catalog`` may also be a **store path** (str / PathLike): the
+    server then boots from the persistent columnar store via
+    ``Dataset.load`` — lazy, memory-mapped, and without ever touching
+    the build pipeline (cold-start knobs ``eager_load`` /
+    ``verify_store`` are documented in docs/serving.md).
     """
 
-    def __init__(self, catalog: Catalog, layout: str = "extvp",
+    def __init__(self, catalog: Union[Catalog, str, os.PathLike],
+                 layout: str = "extvp",
                  backend: str = "eager", mesh=None,
                  plan_cache_size: int = 512,
                  max_batch: int = 32, flush_ms: float = 2.0,
-                 batch_shapes: Optional[Sequence[int]] = None):
+                 batch_shapes: Optional[Sequence[int]] = None,
+                 eager_load: bool = False, verify_store: bool = False):
         if backend not in available_backends():
             raise ValueError(
                 f"unknown backend {backend!r}; available: {available_backends()}")
         # Engine.__init__ (reached below) fails fast on backend="distributed"
         # with mesh=None — a server booted without a mesh must raise here at
         # construction, never accept traffic and error per-request.
-        self.dataset = Dataset(catalog=catalog, dictionary=catalog.dictionary)
+        if isinstance(catalog, (str, os.PathLike)):
+            self.dataset = Dataset.load(catalog, eager=eager_load,
+                                        verify=verify_store, mesh=mesh)
+            catalog = self.dataset.catalog
+        else:
+            self.dataset = Dataset(catalog=catalog,
+                                   dictionary=catalog.dictionary)
         self.engine: Engine = self.dataset.engine(
             backend, layout=layout, mesh=mesh,
             plan_cache_size=plan_cache_size, batch_shapes=batch_shapes)

@@ -1,0 +1,33 @@
+"""Persistent columnar catalog store (the analogue of S2RDF's one-time
+Parquet load job on HDFS, paper §4–§5): write a built catalog to disk
+once, then boot any number of query processes from it — memory-mapped,
+zero-copy, without ever re-running the semi-join grid.
+
+    ds = Dataset.watdiv(scale=1.0, threshold=0.25)
+    ds.save("watdiv.store")                    # streaming columnar write
+    ...
+    ds = Dataset.load("watdiv.store")          # lazy memmap cold start
+    ds.engine("jit").query(...)                # tables fault in on touch
+
+Layout, manifest and integrity rules: :mod:`repro.store.format`.
+Append journal (delta segments + compaction): :mod:`repro.store.delta`.
+"""
+
+from repro.store.delta import (
+    DeltaSegment, append_segment, clear_segments, delta_stats, read_segments,
+)
+from repro.store.format import (
+    FORMAT_NAME, FORMAT_VERSION, StoreChecksumError, StoreError,
+    StoreFormatError, is_store, load_manifest, section_bytes,
+)
+from repro.store.reader import StoreInfo, load_catalog, load_dictionary
+from repro.store.writer import write_store
+
+__all__ = [
+    "FORMAT_NAME", "FORMAT_VERSION",
+    "StoreError", "StoreFormatError", "StoreChecksumError",
+    "is_store", "load_manifest", "section_bytes",
+    "StoreInfo", "load_catalog", "load_dictionary", "write_store",
+    "DeltaSegment", "append_segment", "read_segments", "clear_segments",
+    "delta_stats",
+]

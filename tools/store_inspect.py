@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Inspect a persistent columnar catalog store.
+
+    PYTHONPATH=src python tools/store_inspect.py <path> [--no-verify]
+
+Prints the manifest version, the SF-threshold τ, table counts, on-disk
+bytes per section, and the delta-journal state, then (unless
+``--no-verify``) streams every column file through its manifest CRC-32
+and checks every delta segment's payload checksum.  Exit status is
+non-zero on a missing/malformed store or any checksum mismatch, so this
+doubles as a fsck for CI and operators.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n} B"
+        n /= 1024
+    return f"{n} B"
+
+
+def inspect(path: str, verify: bool = True) -> int:
+    from repro.store import (StoreError, load_manifest, read_segments,
+                             section_bytes)
+    from repro.store.format import crc32_file
+
+    try:
+        manifest = load_manifest(path)
+    except StoreError as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        return 1
+
+    sec = section_bytes(manifest, path)
+    sf = manifest["sf"]
+    n_empty = sum(1 for v in sf.values() if v == 0.0)
+    n_identity = sum(1 for v in sf.values() if v == 1.0)
+    print(f"store:            {os.path.abspath(path)}")
+    print(f"format:           {manifest['format']} v{manifest['version']}")
+    print(f"threshold τ:      {manifest['threshold']}")
+    print(f"kinds:            {' '.join(manifest['kinds'])}")
+    print(f"build backend:    {manifest.get('build_backend', '?')}")
+    print(f"triples:          {manifest['tt']['rows']}")
+    print(f"dictionary terms: {manifest['dictionary']['n_terms']}")
+    print(f"VP tables:        {len(manifest['vp'])}")
+    print(f"ExtVP tables:     {len(manifest['extvp'])} materialized "
+          f"({len(sf)} pair stats, {n_empty} empty, {n_identity} identity)")
+    print("on-disk bytes:")
+    for name in ("manifest", "dictionary", "tt", "vp", "extvp", "delta"):
+        print(f"  {name:<11} {_fmt_bytes(sec[name])}")
+    print(f"  {'total':<11} {_fmt_bytes(sum(sec.values()))}")
+
+    try:
+        segments = read_segments(path)   # always payload-checksummed
+    except StoreError as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        return 1
+    print(f"delta segments:   {len(segments)} "
+          f"({sum(len(s.triples) for s in segments)} journaled triples)")
+
+    if not verify:
+        return 0
+    entries = [manifest["dictionary"]["terms"], manifest["dictionary"]["values"],
+               manifest["tt"], *manifest["vp"].values(),
+               *manifest["extvp"].values()]
+    bad = 0
+    for entry in entries:
+        fpath = os.path.join(path, entry["file"])
+        if not os.path.isfile(fpath):
+            print(f"MISSING: {entry['file']}", file=sys.stderr)
+            bad += 1
+            continue
+        actual = crc32_file(fpath)
+        if actual != int(entry["crc32"]):
+            print(f"CHECKSUM MISMATCH: {entry['file']} "
+                  f"({actual:#010x} != {int(entry['crc32']):#010x})",
+                  file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"checksums:        FAILED ({bad}/{len(entries)} files)",
+              file=sys.stderr)
+        return 1
+    print(f"checksums:        OK ({len(entries)} files)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="store directory (holds manifest.json)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the streaming checksum pass over column files")
+    args = ap.parse_args()
+    sys.exit(inspect(args.path, verify=not args.no_verify))
+
+
+if __name__ == "__main__":
+    main()
