@@ -1,0 +1,186 @@
+"""Adaptive backend routing vs static backends (the ``backend="auto"``
+payoff).
+
+``BENCH_modifier_queries.json`` proves no static backend choice is right:
+jit is ~0.5x eager on one WatDiv template and ~4x on another.  This
+benchmark serves each template micro-batched (the serving-layer shape,
+where the winners actually differ) through every static backend and
+through the adaptive runtime, and checks that ``auto`` lands within 5% of
+the best static backend and strictly above the worst — per template, with
+the winner *measured* by the router, never table-driven.
+
+Emits ``BENCH_adaptive_routing.json``::
+
+    {"scale": ..., "batch": 16, "backends": ["eager", "jit"],
+     "templates": {name: {"eager_qps": ..., "jit_qps": ...,
+                          "auto_qps": ..., "best_static": "jit",
+                          "auto_vs_best": 0.99, "auto_vs_worst": 3.1,
+                          "router_choice": "jit",
+                          "router_reason": "measured"}, ...},
+     "criteria": {"min_vs_best": 0.95, "pass": true}}
+
+With ``strict=True`` (the default) the criteria are enforced: the report
+is still written, then a ``RuntimeError`` lists every violation — the
+benchmark doubles as the regression gate for the routing layer.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from benchmarks import common
+from repro.engine import Engine, RuntimeConfig, template_signature
+
+DEFAULT_OUT = "BENCH_adaptive_routing.json"
+BATCH = 16
+STATIC_BACKENDS = ("eager", "jit")
+MIN_VS_BEST = 0.95
+
+
+MIN_PASS_REQUESTS = 256
+
+
+def _templates(ds) -> Dict[str, List[str]]:
+    """The WatDiv serving suite: the plain star from serve_throughput
+    plus the modifier templates — per-template winners differ across
+    them, which is the whole case for routing.  Request lists are tiled
+    up to ``MIN_PASS_REQUESTS`` so one timed pass is tens of
+    milliseconds: passes comparable to an OS scheduler quantum measure
+    the scheduler, not the engine."""
+    from benchmarks import modifier_queries, serve_throughput
+    out = {"follows_email_star": serve_throughput._requests(ds, 64)}
+    out.update(modifier_queries._templates(ds))
+    for name, reqs in out.items():
+        reps = -(-MIN_PASS_REQUESTS // len(reqs))
+        out[name] = reqs * reps
+    return out
+
+
+def _serve_pass(eng: Engine, requests: List[str]) -> None:
+    for i in range(0, len(requests), BATCH):
+        eng.query_batch(requests[i: i + BATCH])
+
+
+def _warm(eng: Engine, requests: List[str], converge: bool = False) -> None:
+    """One pass lands compiles and capacity-growth retraces before the
+    clock starts; the auto engine additionally warms until the router
+    reports a measured choice (its warmup rotation deliberately visits
+    the slow backend — measuring through it would punish adaptivity for
+    doing its job)."""
+    _serve_pass(eng, requests)
+    if converge:
+        sig = template_signature(requests[0])
+        for _ in range(8):
+            st = eng.router.report()["signatures"].get(sig, {})
+            if st.get("reason") == "measured":
+                break
+            _serve_pass(eng, requests)
+
+
+def _qps_interleaved(engines: Dict[str, Engine], requests: List[str],
+                     repeats: int = 7) -> Dict[str, float]:
+    """Best-of-N pass time per engine, with the engines measured
+    round-robin inside each repeat — machine-wide drift between rounds
+    (the container's noisy neighbors) hits every engine alike instead of
+    whichever happened to be measured last."""
+    best = {name: float("inf") for name in engines}
+    for _ in range(repeats):
+        for name, eng in engines.items():
+            t0 = time.perf_counter()
+            _serve_pass(eng, requests)
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: len(requests) / t for name, t in best.items()}
+
+
+def _auto_engine(ds) -> Engine:
+    # two discarded + two counted launches per backend: the discards
+    # absorb XLA compiles AND the capacity-growth retraces that would
+    # otherwise poison a single counted sample.  Probe sparsely: probing
+    # cadence is an operator knob sized to the serving window, and this
+    # window is a few hundred requests — a default-cadence probe pass
+    # would dominate it (probe/drift behavior is covered by
+    # tests/test_runtime.py, not measured here).
+    return Engine(ds, backend="auto",
+                  runtime=RuntimeConfig(router_warmup=2, router_discard=2,
+                                        router_probe_every=2048))
+
+
+def run(scale: float = 1.0, csv: Optional[common.Csv] = None,
+        out_path: str = DEFAULT_OUT, strict: bool = True
+        ) -> Dict[str, object]:
+    ds = common.facade(scale, threshold=0.25)
+    templates = _templates(ds)
+    results: Dict[str, Dict[str, object]] = {}
+    violations: List[str] = []
+    for name, requests in templates.items():
+        # fresh engine per measurement: each owns its caches
+        engines = {b: Engine(ds, backend=b) for b in STATIC_BACKENDS}
+        auto_eng = engines["auto"] = _auto_engine(ds)
+        for b, eng in engines.items():
+            _warm(eng, requests, converge=(b == "auto"))
+        qps = _qps_interleaved(engines, requests)
+        static = {b: qps[b] for b in STATIC_BACKENDS}
+        auto_qps = qps["auto"]
+        sig = template_signature(requests[0])
+        route = auto_eng.router.report()["signatures"].get(sig, {})
+        best_b = max(static, key=static.get)
+        worst_b = min(static, key=static.get)
+        entry = {
+            **{f"{b}_qps": q for b, q in static.items()},
+            "auto_qps": auto_qps,
+            "best_static": best_b,
+            "auto_vs_best": auto_qps / static[best_b],
+            "auto_vs_worst": auto_qps / static[worst_b],
+            "router_choice": route.get("choice"),
+            "router_reason": route.get("reason"),
+        }
+        results[name] = entry
+        if entry["auto_vs_best"] < MIN_VS_BEST:
+            violations.append(
+                f"{name}: auto {auto_qps:.0f} q/s is "
+                f"{entry['auto_vs_best']:.2f}x best static "
+                f"({best_b} {static[best_b]:.0f} q/s) < {MIN_VS_BEST}")
+        # "faster than the worst" only means something when the statics
+        # actually differ — when best ≈ worst (within the same 5% band)
+        # the vs_best criterion already covers the template
+        if len(static) > 1 and entry["auto_vs_worst"] <= 1.0 and \
+                static[worst_b] < MIN_VS_BEST * static[best_b]:
+            violations.append(
+                f"{name}: auto {auto_qps:.0f} q/s not above worst static "
+                f"({worst_b} {static[worst_b]:.0f} q/s)")
+        if csv is not None:
+            csv.add(f"routing/{name}", 1e6 / auto_qps,
+                    f"auto {auto_qps:.0f}q/s -> {route.get('choice')} "
+                    f"({entry['auto_vs_best']:.2f}x best)")
+    report = {
+        "scale": scale,
+        "batch": BATCH,
+        "backends": list(STATIC_BACKENDS),
+        "n_requests": {k: len(v) for k, v in templates.items()},
+        "templates": results,
+        "criteria": {"min_vs_best": MIN_VS_BEST,
+                     "pass": not violations,
+                     "violations": violations},
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if strict and violations:
+        raise RuntimeError(
+            "adaptive routing below static baselines:\n  "
+            + "\n  ".join(violations))
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--no-strict", action="store_true",
+                    help="record criteria violations without failing")
+    args = ap.parse_args()
+    print(json.dumps(run(scale=args.scale, out_path=args.out,
+                         strict=not args.no_strict), indent=2))

@@ -12,9 +12,9 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import common, modifier_queries, sec74_threshold, \
-    serve_throughput, store_load, table2_load, table3_st, table4_basic, \
-    table5_il
+from benchmarks import adaptive_routing, common, modifier_queries, \
+    sec74_threshold, serve_throughput, store_load, table2_load, table3_st, \
+    table4_basic, table5_il
 from benchmarks.common import Csv
 
 TABLES = {
@@ -26,6 +26,7 @@ TABLES = {
     "serve": serve_throughput.run,   # writes BENCH_serve_throughput.json
     "modifiers": modifier_queries.run,  # writes BENCH_modifier_queries.json
     "store": store_load.run,         # writes BENCH_store_load.json
+    "routing": adaptive_routing.run,  # writes BENCH_adaptive_routing.json
 }
 
 

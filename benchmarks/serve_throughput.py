@@ -1,31 +1,45 @@
 """Serving throughput vs micro-batch size (the batched-execution payoff).
 
 Serves one templated workload (the ST-1-style ``follows → email`` star,
-constants cycling over users) through the jit backend at micro-batch
-sizes 1 / 8 / 32 and reports queries/sec.  Batch size 1 is the
-per-request path (``Engine.query``); larger sizes stack the constants
-into one XLA launch (``Engine.query_batch``), so the speedup measures
-pure launch/dispatch amortization — compile time is excluded by a warmup
-pass per batch shape.
+constants cycling over users) through the jit backend at each micro-batch
+size and reports queries/sec.  Batch size 1 is the per-request path
+(``Engine.query``); larger sizes stack the constants into one XLA launch
+(``Engine.query_batch``), so the speedup measures pure launch/dispatch
+amortization — compile time is excluded by a warmup pass per batch shape.
+
+One engine serves every batch size, so its :class:`~repro.runtime
+.BatchTuner` sees all the shapes: a bucket that measures slower per slot
+than a smaller bucket is retired mid-benchmark and larger submissions
+chunk down to the surviving shape.  A **bucket inversion** — a larger
+batch size serving fewer q/s than a smaller one beyond tolerance — is a
+hard failure (``strict=True``): the exact regression this file once
+recorded silently (batch-32 < batch-8) must now either be cured by the
+tuner or fail the run.
 
 Emits ``BENCH_serve_throughput.json``::
 
     {"scale": ..., "backend": "jit", "n_requests": ...,
      "qps": {"1": ..., "8": ..., "32": ...},
-     "speedup_32_over_1": ...}
+     "speedup_32_over_1": ...,
+     "tuner": {"active": [...], "retired": {...}},
+     "inversions": []}
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from benchmarks import common
 from repro.engine import Engine
 
 BATCH_SIZES = (1, 8, 32)
 DEFAULT_OUT = "BENCH_serve_throughput.json"
+# a larger batch size must serve at least this fraction of every smaller
+# size's throughput — below it, the bigger bucket is a measured regression
+INVERSION_TOLERANCE = 0.9
 
 
 def _requests(ds, n: int) -> List[str]:
@@ -61,30 +75,73 @@ def _qps(eng: Engine, requests: List[str], batch: int,
 
 def run(scale: float = 1.0, csv: Optional[common.Csv] = None,
         backend: str = "jit", n_requests: int = 96,
-        out_path: str = DEFAULT_OUT) -> Dict[str, float]:
+        out_path: str = DEFAULT_OUT,
+        batch_sizes: Sequence[int] = BATCH_SIZES,
+        batch_shapes: Optional[Sequence[int]] = None,
+        strict: bool = True) -> Dict[str, object]:
     ds = common.facade(scale, threshold=0.25)
     requests = _requests(ds, n_requests)
+    sizes = sorted(set(int(b) for b in batch_sizes))
+    # ONE engine across sizes, measured smallest-first: the tuner
+    # accumulates per-shape evidence as sizes grow, so a larger bucket
+    # that measures slower per slot gets retired while the benchmark is
+    # still running — submissions at that size chunk down to the
+    # surviving shape instead of recording the regression as fate
+    eng = Engine(ds, backend=backend, batch_shapes=batch_shapes)
     qps: Dict[str, float] = {}
-    for batch in BATCH_SIZES:
-        # fresh engine per shape: each measurement owns its caches
-        eng = Engine(ds, backend=backend)
+    for batch in sizes:
         qps[str(batch)] = _qps(eng, requests, batch)
         if csv is not None:
             csv.add(f"serve_qps_batch{batch}",
                     1.0 / qps[str(batch)],
                     f"{qps[str(batch)]:.0f} q/s")
+    inversions: List[str] = []
+    for i, big in enumerate(sizes):
+        for small in sizes[:i]:
+            if qps[str(big)] < INVERSION_TOLERANCE * qps[str(small)]:
+                inversions.append(
+                    f"batch-{big} serves {qps[str(big)]:.0f} q/s < "
+                    f"{INVERSION_TOLERANCE:.0%} of batch-{small} "
+                    f"({qps[str(small)]:.0f} q/s)")
+    tuner = eng.tuner.report()
     report = {
         "scale": scale,
         "backend": backend,
         "n_requests": n_requests,
         "qps": qps,
-        "speedup_32_over_1": qps["32"] / qps["1"],
+        f"speedup_{sizes[-1]}_over_{sizes[0]}":
+            qps[str(sizes[-1])] / qps[str(sizes[0])],
+        "tuner": {"active": tuner["active"], "retired": tuner["retired"]},
+        "inversions": inversions,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
+    if strict and inversions:
+        raise RuntimeError("micro-batch bucket inversion:\n  "
+                           + "\n  ".join(inversions))
     return report
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(scale=0.5), indent=2))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--backend", default="jit")
+    ap.add_argument("--n-requests", type=int, default=96)
+    ap.add_argument("--batch-sizes", default=None,
+                    help="comma-separated submission sizes (default 1,8,32)")
+    ap.add_argument("--batch-shapes", default=None,
+                    help="comma-separated static bucket menu for the engine")
+    ap.add_argument("--no-strict", action="store_true",
+                    help="record inversions without failing")
+    args = ap.parse_args()
+    parse = lambda s: tuple(int(t) for t in s.replace(",", " ").split())
+    print(json.dumps(run(
+        scale=args.scale, out_path=args.out, backend=args.backend,
+        n_requests=args.n_requests,
+        batch_sizes=parse(args.batch_sizes) if args.batch_sizes
+        else BATCH_SIZES,
+        batch_shapes=parse(args.batch_shapes) if args.batch_shapes
+        else None,
+        strict=not args.no_strict), indent=2))

@@ -26,7 +26,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=60)
     ap.add_argument("--layout", default="extvp", choices=["extvp", "vp", "tt"])
     ap.add_argument("--backend", default="eager",
-                    help="ExecutionBackend registry key (eager/jit/...)")
+                    help="ExecutionBackend registry key (eager/jit/...) or "
+                         "'auto' for per-template adaptive routing")
     args = ap.parse_args()
 
     print(f"generating WatDiv SF={args.scale} ...")
@@ -67,6 +68,9 @@ def main() -> None:
           f"padding waste {m['padding_waste']:.2f})")
     print(f"  result rows: {int(m['rows'])}, empty answers: "
           f"{int(m['empties'])} (statistics-only: {int(m['short_circuits'])})")
+    if m["routed"]:
+        print(f"  adaptive routing: {m['routed']} "
+              "(engine.runtime_report() has the full decision log)")
 
 
 if __name__ == "__main__":

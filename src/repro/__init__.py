@@ -29,8 +29,8 @@ if "xla_cpu_use_thunk_runtime" not in _flags:
 
 from repro.engine import (
     ConstantBinding, Dataset, Engine, ExecutionBackend, ExecutionContext,
-    PreparedQuery, QueryTemplate, Result, ServerMetrics, available_backends,
-    create_backend, register_backend, template_signature,
+    PreparedQuery, QueryTemplate, Result, RuntimeConfig, ServerMetrics,
+    available_backends, create_backend, register_backend, template_signature,
 )
 
 __all__ = [
@@ -38,5 +38,5 @@ __all__ = [
     "ExecutionBackend", "ExecutionContext", "PreparedQuery",
     "register_backend", "create_backend", "available_backends",
     "QueryTemplate", "ConstantBinding", "template_signature",
-    "ServerMetrics",
+    "ServerMetrics", "RuntimeConfig",
 ]

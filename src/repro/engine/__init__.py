@@ -34,6 +34,7 @@ from repro.engine.result import Result
 from repro.engine.template import (
     ConstantBinding, QueryTemplate, template_signature,
 )
+from repro.runtime import BackendRouter, BatchTuner, RuntimeConfig
 
 __all__ = [
     "Dataset", "Engine", "Result",
@@ -41,4 +42,5 @@ __all__ = [
     "register_backend", "create_backend", "available_backends",
     "QueryTemplate", "ConstantBinding", "template_signature",
     "ServerMetrics", "PlanCache",
+    "RuntimeConfig", "BackendRouter", "BatchTuner",
 ]

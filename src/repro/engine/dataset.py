@@ -259,16 +259,22 @@ class Dataset:
     # -- engines --------------------------------------------------------------
     def engine(self, backend: str = "eager", layout: str = "extvp",
                mesh=None, plan_cache_size: int = 512,
-               batch_shapes=None) -> Engine:
+               batch_shapes=None, runtime=None) -> Engine:
         """An :class:`Engine` over this dataset.  Engines are cached per
-        configuration so repeated calls share plan caches."""
+        configuration so repeated calls share plan caches.
+
+        ``backend="auto"`` enables the adaptive runtime: the engine
+        measures each template on every candidate backend and routes to
+        the observed winner (knobs via ``runtime=RuntimeConfig(...)``;
+        see docs/serving.md, "Adaptive runtime")."""
         key = (backend, layout, id(mesh), plan_cache_size,
-               None if batch_shapes is None else tuple(batch_shapes))
+               None if batch_shapes is None else tuple(batch_shapes),
+               id(runtime))
         eng = self._engines.get(key)
         if eng is None:
             eng = Engine(self, backend=backend, layout=layout, mesh=mesh,
                          plan_cache_size=plan_cache_size,
-                         batch_shapes=batch_shapes)
+                         batch_shapes=batch_shapes, runtime=runtime)
             self._engines[key] = eng
         return eng
 

@@ -9,8 +9,14 @@
   constants re-bind as runtime values);
 * the statistics short-circuit (provably-empty plans answered without
   touching data, the ST-8 behaviour, visible per request);
+* the **adaptive runtime** (``backend="auto"``): a per-template
+  :class:`~repro.runtime.router.BackendRouter` that measures eager /
+  jit / distributed latency and routes each signature to its observed
+  winner, and a :class:`~repro.runtime.tuner.BatchTuner` that adapts
+  the micro-batch shape menu from observed launch latencies (see
+  docs/serving.md, "Adaptive runtime");
 * operator metrics: latency percentiles, plan-cache hit rate,
-  empty-answer count, rows served.
+  empty-answer count, rows served, per-backend routing counts.
 
 S2RDF notes that repeated Virtuoso queries benefit from caching while its
 own runtimes are stable: here we cache *compilation*, never results.
@@ -18,7 +24,6 @@ own runtimes are stable: here we cache *compilation*, never results.
 
 from __future__ import annotations
 
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -30,6 +35,9 @@ from repro.engine.backends import (
 )
 from repro.engine.result import Result
 from repro.engine.template import QueryTemplate, _normalize, template_signature
+from repro.runtime import BackendRouter, BatchTuner, RouteDecision, \
+    RuntimeConfig
+from repro.runtime.config import runtime_config as _global_runtime_config
 
 __all__ = ["Engine", "ServerMetrics", "PlanCache"]
 
@@ -58,6 +66,17 @@ class ServerMetrics:
     batched_requests: int = 0 # requests served through a batched launch
     padding_slots: int = 0    # slots wasted padding up to a static shape
     queue_ms: List[float] = field(default_factory=list)  # submit -> result
+    # adaptive runtime: requests per backend actually executed on (on a
+    # static engine this is all one key; under "auto" it shows the mix)
+    routed: Dict[str, int] = field(default_factory=dict)
+
+    # Snapshot provider attached by the owning Engine — lets anything
+    # holding the metrics object (SparqlServer, dashboards) pull the full
+    # router/tuner state without a reference to the engine itself.
+    runtime_report_fn = None
+
+    def record_route(self, backend: str, count: int = 1) -> None:
+        self.routed[backend] = self.routed.get(backend, 0) + count
 
     def record_latency(self, ms: float, count: int = 1) -> None:
         self.latencies_ms.extend([ms] * count)
@@ -68,6 +87,12 @@ class ServerMetrics:
         self.queue_ms.append(ms)
         if len(self.queue_ms) > _MAX_SAMPLES:
             del self.queue_ms[: -_MAX_SAMPLES]
+
+    def runtime_report(self) -> Dict[str, object]:
+        """The owning engine's router/tuner snapshot (empty when the
+        metrics object is not attached to an engine)."""
+        fn = self.runtime_report_fn
+        return fn() if fn is not None else {}
 
     def summary(self) -> Dict[str, float]:
         lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
@@ -91,6 +116,7 @@ class ServerMetrics:
             "padding_waste": self.padding_slots / max(slots, 1),
             "queue_p50_ms": float(np.percentile(qms, 50)),
             "queue_p99_ms": float(np.percentile(qms, 99)),
+            "routed": dict(self.routed),
         }
 
 
@@ -128,28 +154,48 @@ class PlanCache:
 
 
 class Engine:
-    """Execute SPARQL text over a Dataset through one pluggable backend.
+    """Execute SPARQL text over a Dataset through one pluggable backend —
+    or through the adaptive runtime.
 
     Created via :meth:`repro.engine.dataset.Dataset.engine` (or directly
     from a catalog-bearing dataset).  ``backend`` is a registry key —
     ``"eager"``, ``"jit"``, ``"distributed"``, or anything registered via
-    :func:`repro.engine.backends.register_backend`.
+    :func:`repro.engine.backends.register_backend` — or the special key
+    ``"auto"``: the engine then prepares templates on every candidate
+    backend (eager + jit, plus distributed when a mesh is given) and a
+    :class:`~repro.runtime.BackendRouter` routes each template signature
+    to its measured-latency winner (warmup → exploit → periodic probe;
+    knobs on :class:`~repro.runtime.RuntimeConfig` / ``runtime=``).
     """
 
     #: Static batch shapes a micro-batch is padded up to.  A small fixed
     #: menu bounds the number of compiled programs per template at
-    #: ``len(BATCH_SHAPES)`` while keeping padding waste < 50%.
+    #: ``len(BATCH_SHAPES)`` while keeping padding waste < 50%.  The
+    #: live menu belongs to :class:`~repro.runtime.BatchTuner`, which
+    #: retires shapes that measure slower than smaller ones.
     BATCH_SHAPES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
 
     def __init__(self, dataset, backend: str = "eager",
                  layout: str = "extvp", mesh=None,
                  plan_cache_size: int = 512,
-                 batch_shapes: Optional[Sequence[int]] = None):
+                 batch_shapes: Optional[Sequence[int]] = None,
+                 runtime: Optional[RuntimeConfig] = None):
+        # alpa global_config idiom: engines without an explicit runtime=
+        # share the process-wide default instance
+        self.config = runtime if runtime is not None else \
+            _global_runtime_config
         if isinstance(backend, ExecutionBackend):
-            self._backend = backend
+            self._backends: Dict[str, ExecutionBackend] = \
+                {backend.name: backend}
+        elif backend == "auto":
+            names = ["eager", "jit"] + \
+                (["distributed"] if mesh is not None else [])
+            self._backends = {n: create_backend(n) for n in names}
         else:
-            self._backend = create_backend(backend)
-        if self._backend.name == "distributed" and mesh is None:
+            b = create_backend(backend)
+            self._backends = {b.name: b}
+        self.auto = len(self._backends) > 1 or backend == "auto"
+        if "distributed" in self._backends and mesh is None:
             raise ValueError(
                 "distributed backend needs a mesh: pass mesh=jax.make_mesh("
                 "(n_devices,), ('data',)) (see docs/serving.md)")
@@ -160,27 +206,46 @@ class Engine:
                                     layout=layout, mesh=mesh)
         self.cache = PlanCache(plan_cache_size)
         self.metrics = ServerMetrics()
-        shapes = self.BATCH_SHAPES if batch_shapes is None \
-            else tuple(batch_shapes)
+        self.metrics.runtime_report_fn = self.runtime_report
+        if batch_shapes is None:
+            shapes = self.config.batch_shapes
+        else:
+            shapes = tuple(batch_shapes)
         if not shapes or min(shapes) < 1:
             raise ValueError("batch_shapes must be positive ints")
         self.batch_shapes: Tuple[int, ...] = tuple(sorted(shapes))
+        self.router = BackendRouter(tuple(self._backends), self.config)
+        self.tuner = BatchTuner(self.batch_shapes, self.config)
 
     @property
     def backend(self) -> str:
-        return self._backend.name
+        if self.auto:
+            return "auto"
+        return next(iter(self._backends))
+
+    @property
+    def _backend(self) -> ExecutionBackend:
+        """The sole backend of a static engine (back-compat accessor)."""
+        return next(iter(self._backends.values()))
 
     # -- compilation ----------------------------------------------------------
-    def _lookup(self, qtext: str, sig: str) -> Optional[PreparedQuery]:
-        prepared = self.cache.get(sig)
+    def _cache_key(self, bname: str, sig: str) -> str:
+        # static engines keep the bare signature as the key (the public,
+        # documented cache shape); auto engines hold one prepared query
+        # per (backend, signature)
+        return sig if not self.auto else f"{bname}::{sig}"
+
+    def _lookup(self, bname: str, qtext: str, sig: str
+                ) -> Optional[PreparedQuery]:
+        prepared = self.cache.get(self._cache_key(bname, sig))
         if prepared is not None:
             return prepared
         # Non-rebindable templates (e.g. a constant in predicate position)
         # are cached under the exact normalized text instead, so identical
         # repeats still skip parsing and compilation.
-        return self.cache.get("=" + _normalize(qtext))
+        return self.cache.get(self._cache_key(bname, "=" + _normalize(qtext)))
 
-    def _build(self, qtext: str, sig: str) -> PreparedQuery:
+    def _build(self, bname: str, qtext: str, sig: str) -> PreparedQuery:
         try:
             template = QueryTemplate(qtext, self.ctx.dictionary)
         except ValueError:
@@ -190,37 +255,86 @@ class Engine:
             template = None
         if template is None or not template.rebindable:
             template = QueryTemplate.concrete(qtext, self.ctx.dictionary)
-        prepared = self._backend.prepare(template, self.ctx)
-        self.cache.put(sig if template.rebindable else "=" + _normalize(qtext),
-                       prepared)
+        prepared = self._backends[bname].prepare(template, self.ctx)
+        key = sig if template.rebindable else "=" + _normalize(qtext)
+        self.cache.put(self._cache_key(bname, key), prepared)
         return prepared
 
-    def prepare(self, qtext: str) -> PreparedQuery:
-        """Prepared form of ``qtext``'s template, from cache if present.
-        Cache-hit bookkeeping happens in :meth:`query`; ``prepare`` is the
-        silent path for callers managing their own loop."""
-        sig = template_signature(qtext)
-        prepared = self._lookup(qtext, sig)
+    def _prepared_for(self, bname: str, qtext: str, sig: str,
+                      counted: bool = False) -> PreparedQuery:
+        prepared = self._lookup(bname, qtext, sig)
         if prepared is not None:
+            if counted:
+                self.metrics.plan_hits += 1
             return prepared
-        return self._build(qtext, sig)
+        if counted:
+            self.metrics.plan_misses += 1
+        return self._build(bname, qtext, sig)
+
+    def prepare(self, qtext: str) -> PreparedQuery:
+        """Prepared form of ``qtext``'s template, from cache if present,
+        on the backend the router currently favors.  Cache-hit
+        bookkeeping happens in :meth:`query`; ``prepare`` is the silent
+        path for callers managing their own loop."""
+        sig = template_signature(qtext)
+        _, prepared = self._route(qtext, sig, counted=False, peek=True)
+        return prepared
+
+    # -- routing ---------------------------------------------------------------
+    def _route(self, qtext: str, sig: str, counted: bool = True,
+               peek: bool = False,
+               use: Optional[RouteDecision] = None
+               ) -> Tuple[RouteDecision, PreparedQuery]:
+        """Decide a backend for this request and return its prepared
+        query.  A backend whose ``prepare`` raises (auto mode only) is
+        excluded for the signature and the router re-decides; a prepared
+        query that silently fell back to the eager host path is likewise
+        excluded — the router must never attribute eager latencies to a
+        device backend.  ``use`` short-circuits the first decision (a
+        micro-batch group decides once via :meth:`BackendRouter.decide`
+        and shares it); the exclusion/re-route machinery still applies."""
+        while True:
+            if use is not None:
+                decision, use = use, None
+            else:
+                decision = self.router.peek(sig) if peek \
+                    else self.router.decide(sig)
+            bname = decision.backend
+            try:
+                prepared = self._prepared_for(bname, qtext, sig, counted)
+            except Exception:
+                if self.auto and bname != "eager":
+                    self.router.mark_failed(sig, bname)
+                    counted = False    # one request, one hit/miss count
+                    continue
+                raise
+            if self.auto and bname != "eager" and prepared.fallback:
+                self.router.mark_fallback(sig, bname)
+                counted = False
+                continue
+            return decision, prepared
 
     def explain(self, qtext: str) -> str:
-        """The compiled plan of ``qtext``'s template (diagnostics)."""
-        prepared = self.prepare(qtext)
+        """The compiled plan of ``qtext``'s template plus the routing
+        decision it would get right now and why (``forced`` on a static
+        engine, ``warmup``/``measured``/``probe`` under ``auto``) —
+        diagnostics, consumes no routing budget."""
+        sig = template_signature(qtext)
+        decision, prepared = self._route(qtext, sig, counted=False,
+                                         peek=True)
         plan = getattr(prepared, "plan", None)
-        return plan.describe() if plan is not None else "(operator tree)"
+        lines = [plan.describe() if plan is not None else "(operator tree)"]
+        st = self.router.report()["signatures"].get(sig, {})
+        ewma = st.get("ewma_ms", {})
+        detail = ", ".join(f"{b}={ewma[b]:.3f}ms" for b in sorted(ewma))
+        lines.append(f"backend: {decision.backend} ({decision.reason}"
+                     + (f"; measured {detail}" if detail else "") + ")")
+        if getattr(prepared, "fallback", False):
+            lines.append("note: prepared as an eager fallback "
+                         "(device path cannot express this template)")
+        return "\n".join(lines)
 
     # -- execution ------------------------------------------------------------
-    def _lookup_counted(self, qtext: str) -> PreparedQuery:
-        sig = template_signature(qtext)
-        prepared = self._lookup(qtext, sig)
-        if prepared is not None:
-            self.metrics.plan_hits += 1
-            return prepared
-        self.metrics.plan_misses += 1
-        return self._build(qtext, sig)
-
     def _record(self, prepared: PreparedQuery, binding, res: Result) -> None:
         """Per-request result accounting shared by the single-query and
         batched paths."""
@@ -236,47 +350,66 @@ class Engine:
             self.metrics.short_circuits += 1
 
     def query(self, qtext: str) -> Result:
-        t0 = time.perf_counter()
-        prepared = self._lookup_counted(qtext)
+        clock = self.config.clock
+        t0 = clock()
+        sig = template_signature(qtext)
+        decision, prepared = self._route(qtext, sig)
         binding = prepared.template.binding_for(qtext) \
             if prepared.template.rebindable else None
+        t_run = clock()
         res = prepared.run(binding)
-        self.metrics.record_latency((time.perf_counter() - t0) * 1e3)
+        self.router.observe(sig, decision.backend,
+                            (clock() - t_run) * 1e3, reason=decision.reason)
+        self.metrics.record_latency((clock() - t0) * 1e3)
+        self.metrics.record_route(decision.backend)
         self._record(prepared, binding, res)
         return res
 
     # -- batched execution -----------------------------------------------------
     def bucket_shape(self, n: int) -> int:
-        """Smallest configured static batch shape holding ``n`` requests
-        (``n`` larger than the biggest shape is chunked by the caller)."""
-        for s in self.batch_shapes:
-            if s >= n:
-                return s
-        return self.batch_shapes[-1]
+        """Smallest *active* static batch shape holding ``n`` requests
+        (``n`` larger than the biggest shape is chunked by the caller).
+        The menu starts as ``batch_shapes`` and shrinks as the tuner
+        retires shapes that measure slower than smaller ones."""
+        return self.tuner.bucket_for(n)
 
-    def _run_group(self, prepared: PreparedQuery,
+    def max_active_batch(self) -> int:
+        """Largest currently-active batch shape (the micro-batcher's
+        effective bucket bound)."""
+        return self.tuner.max_shape()
+
+    def _run_group(self, sig: str, decision: RouteDecision,
+                   prepared: PreparedQuery,
                    bindings: List[Optional[object]]) -> List[Result]:
         """Execute same-template bindings through ``run_batch``, chunked
-        at the largest static shape and padded up to the bucket shape (the
-        pad repeats a real binding; padded results are dropped).  Backends
-        whose ``run_batch`` is the sequential loop are not padded —
-        padding only buys something when the batch is one static-shape
-        program launch."""
+        at the largest active static shape and padded up to the bucket
+        shape (the pad repeats a real binding; padded results are
+        dropped).  Backends whose ``run_batch`` is the sequential loop
+        are not padded — padding only buys something when the batch is
+        one static-shape program launch."""
         out: List[Result] = []
-        max_shape = self.batch_shapes[-1]
+        clock = self.config.clock
+        max_shape = self.max_active_batch()
         pad = getattr(prepared, "vectorized_batch", False)
         for start in range(0, len(bindings), max_shape):
             chunk = bindings[start: start + max_shape]
             shape = self.bucket_shape(len(chunk)) if pad else len(chunk)
             padded = chunk + [chunk[-1]] * (shape - len(chunk))
-            t0 = time.perf_counter()
+            t0 = clock()
             res = prepared.run_batch(padded)
-            dt_ms = (time.perf_counter() - t0) * 1e3
+            dt_ms = (clock() - t0) * 1e3
             self.metrics.batches += 1
             self.metrics.batched_requests += len(chunk)
             self.metrics.padding_slots += shape - len(chunk)
             # every request in the batch observed the batch's wall time
             self.metrics.record_latency(dt_ms, count=len(chunk))
+            self.metrics.record_route(decision.backend, count=len(chunk))
+            # the router compares per-request service time across
+            # backends; the tuner compares per-slot time across shapes
+            self.router.observe(sig, decision.backend, dt_ms / len(chunk),
+                                reason=decision.reason, weight=len(chunk))
+            if pad:
+                self.tuner.observe(shape, len(chunk), dt_ms)
             out.extend(res[: len(chunk)])
         return out
 
@@ -287,17 +420,47 @@ class Engine:
         in submission order.  This is the synchronous core the serving
         layer's micro-batcher drains into."""
         results: List[Optional[Result]] = [None] * len(qtexts)
-        groups: "OrderedDict[int, Tuple[PreparedQuery, List[int]]]" = \
-            OrderedDict()
+        sig_groups: "OrderedDict[str, List[int]]" = OrderedDict()
         for i, qtext in enumerate(qtexts):
-            prepared = self._lookup_counted(qtext)
-            groups.setdefault(id(prepared), (prepared, []))[1].append(i)
-        for prepared, idxs in groups.values():
-            bindings = [prepared.template.binding_for(qtexts[i])
-                        if prepared.template.rebindable else None
-                        for i in idxs]
-            group_results = self._run_group(prepared, bindings)
-            for i, binding, res in zip(idxs, bindings, group_results):
-                results[i] = res
-                self._record(prepared, binding, res)
+            sig_groups.setdefault(template_signature(qtext), []).append(i)
+        for sig, idxs in sig_groups.items():
+            # ONE routing decision per signature group: the whole group
+            # lands on one backend (so a probe measures the loser on a
+            # realistic batched launch) and the router costs one decision
+            # per launch group, not one per request
+            shared = self.router.decide(sig, n=len(idxs))
+            groups: "OrderedDict[int, Tuple[RouteDecision, PreparedQuery, List[int]]]" = \
+                OrderedDict()
+            for i in idxs:
+                # per-request _route keeps the failure/fallback re-route
+                # machinery; on the cached fast path it is one dict get
+                decision, prepared = self._route(qtexts[i], sig,
+                                                 use=shared)
+                groups.setdefault(id(prepared),
+                                  (decision, prepared, []))[2].append(i)
+            for decision, prepared, sub in groups.values():
+                bindings = [prepared.template.binding_for(qtexts[i])
+                            if prepared.template.rebindable else None
+                            for i in sub]
+                group_results = self._run_group(sig, decision, prepared,
+                                                bindings)
+                for i, binding, res in zip(sub, bindings, group_results):
+                    results[i] = res
+                    self._record(prepared, binding, res)
         return results  # type: ignore[return-value]
+
+    # -- observability ---------------------------------------------------------
+    def runtime_report(self) -> Dict[str, object]:
+        """One JSON-friendly snapshot of every adaptive-runtime decision:
+        per-signature backend choices with their latency estimates, the
+        decision log tail, the live batch-shape menu with per-bucket
+        stats, the active knob values, and the serving metrics.  Field
+        definitions live in docs/serving.md."""
+        return {
+            "backend": self.backend,
+            "auto": self.auto,
+            "router": self.router.report(),
+            "tuner": self.tuner.report(),
+            "config": self.config.snapshot(),
+            "metrics": self.metrics.summary(),
+        }

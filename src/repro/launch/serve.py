@@ -22,7 +22,9 @@ from repro.models.api import Model
 
 
 def serve_sparql(args) -> None:
-    from repro.engine import Dataset
+    import json
+
+    from repro.engine import Dataset, RuntimeConfig
     from repro.rdf.workloads import ST_QUERIES
     from repro.store import is_store
 
@@ -42,22 +44,31 @@ def serve_sparql(args) -> None:
                   f"{time.perf_counter() - t0:.3f}s "
                   "(next boot loads it without rebuilding)")
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    engine = ds.engine(args.backend, mesh=mesh if args.backend == "distributed"
-                       else None)
+    runtime = None
+    if args.batch_shapes:
+        shapes = tuple(int(t) for t in
+                       args.batch_shapes.replace(",", " ").split())
+        runtime = RuntimeConfig(batch_shapes=shapes)
+    # "auto" routes per template across eager/jit (add --backend
+    # distributed explicitly to pin the sharded path to a mesh)
+    engine = ds.engine(args.backend,
+                       mesh=mesh if args.backend == "distributed" else None,
+                       runtime=runtime)
     print(f"store: {ds.n_triples} triples on {jax.device_count()} shard(s), "
           f"backend={engine.backend}")
 
     t0 = time.perf_counter()
-    for name, qtext in ST_QUERIES.items():
-        res = engine.query(qtext)
-        if len(res) == 0:
-            print(f"  {name}: ∅")
-        else:
-            print(f"  {name}: {len(res)} rows")
+    for p in range(max(1, args.passes)):
+        for name, qtext in ST_QUERIES.items():
+            res = engine.query(qtext)
+            if p == 0:
+                print(f"  {name}: {'∅' if len(res) == 0 else f'{len(res)} rows'}")
     m = engine.metrics.summary()
     print(f"served {int(m['served'])} queries in {time.perf_counter()-t0:.2f}s "
           f"(p50 {m['p50_ms']:.1f} ms, {int(m['short_circuits'])} "
-          f"statistics-only empties)")
+          f"statistics-only empties, routed {m['routed']})")
+    if args.runtime_report:
+        print(json.dumps(engine.runtime_report(), indent=2))
 
 
 def serve_lm(args) -> None:
@@ -82,8 +93,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="sparql", choices=["sparql", "lm"])
     ap.add_argument("--backend", default="distributed",
-                    help="ExecutionBackend registry key (eager/jit/distributed)")
+                    help="ExecutionBackend registry key (eager/jit/"
+                         "distributed) or 'auto' for per-template adaptive "
+                         "routing (docs/serving.md)")
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--batch-shapes", default=None,
+                    help="comma-separated micro-batch bucket menu, e.g. "
+                         "1,4,16 (default REPRO_RT_BATCH_SHAPES or "
+                         "1,2,4,8,16,32; the tuner retires measured "
+                         "regressions at runtime)")
+    ap.add_argument("--passes", type=int, default=1,
+                    help="serve the workload N times (give the adaptive "
+                         "router warmup traffic)")
+    ap.add_argument("--runtime-report", action="store_true",
+                    help="print the adaptive-runtime JSON snapshot "
+                         "(routing decisions, batch-shape menu, knobs)")
     ap.add_argument("--store", default=None,
                     help="persistent catalog store directory: boot from it "
                          "when it exists (no build pipeline), else build "

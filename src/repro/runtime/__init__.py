@@ -1,0 +1,28 @@
+"""Adaptive execution runtime: measured, self-tuning serving decisions.
+
+S2RDF's core idea — pick the cheapest physical access path per query
+from statistics — applied to the serving layer itself:
+
+* :class:`RuntimeConfig` centralizes every runtime knob (alpa
+  ``GlobalConfig`` idiom) with ``REPRO_RT_*`` env overrides and an
+  injectable clock.
+* :class:`BackendRouter` routes each template signature to the backend
+  (eager / jit / distributed) its own measured latencies favor, with
+  warmup, periodic re-probing, and deterministic exclusion of backends
+  that failed to prepare or fell back to the host path.
+* :class:`BatchTuner` adapts the micro-batch shape menu from observed
+  per-slot latency and occupancy, retiring bucket sizes that measure
+  slower than smaller ones.
+
+``Engine(dataset, backend="auto")`` (and ``SparqlServer(...,
+backend="auto")``, ``repro.launch.serve --backend auto``) wires all
+three together; ``engine.runtime_report()`` snapshots every decision.
+See docs/serving.md ("Adaptive runtime").
+"""
+
+from repro.runtime.config import RuntimeConfig, runtime_config
+from repro.runtime.router import BackendRouter, RouteDecision
+from repro.runtime.tuner import BatchTuner
+
+__all__ = ["RuntimeConfig", "runtime_config", "BackendRouter",
+           "RouteDecision", "BatchTuner"]

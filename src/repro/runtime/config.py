@@ -1,0 +1,116 @@
+"""Centralized runtime knobs for the adaptive execution layer.
+
+Every tunable of the :class:`~repro.runtime.router.BackendRouter`, the
+:class:`~repro.runtime.tuner.BatchTuner` and the micro-batching layer
+lives here, alpa ``GlobalConfig``-style: one object, defaults readable in
+one place, every knob overridable from the environment (``REPRO_RT_*``)
+so a deployment can be re-tuned without touching code.
+
+The config also owns the **clock**.  Router and tuner decisions depend
+only on latencies measured through ``config.clock`` — inject a fake
+clock and every decision becomes deterministic and unit-testable
+(``tests/test_runtime.py`` scripts entire convergence histories this
+way).
+
+    cfg = RuntimeConfig(router_warmup=3, batch_shapes=(1, 4, 16))
+    eng = dataset.engine("auto", runtime=cfg)
+
+    REPRO_RT_BATCH_SHAPES=1,2,4,8 python -m repro.launch.serve ...
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Tuple
+
+__all__ = ["RuntimeConfig", "runtime_config"]
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def _env_float(name: str, default: float) -> float:
+    return float(os.environ.get(name, default))
+
+
+def _env_shapes(name: str, default: Tuple[int, ...]) -> Tuple[int, ...]:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    shapes = tuple(int(tok) for tok in raw.replace(",", " ").split())
+    if not shapes or min(shapes) < 1:
+        raise ValueError(f"{name} must be positive ints, got {raw!r}")
+    return tuple(sorted(set(shapes)))
+
+
+class RuntimeConfig:
+    """All adaptive-runtime knobs, with ``REPRO_RT_*`` env overrides.
+
+    Keyword arguments override both the defaults and the environment;
+    unknown names raise (typos must not silently become dead knobs).
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 **overrides):
+        ######## Backend router ########
+        # measured executions per (signature, backend) before the router
+        # starts exploiting the observed winner
+        self.router_warmup = _env_int("REPRO_RT_WARMUP", 2)
+        # after convergence, every Nth request of a signature re-probes a
+        # non-winning backend (drift detection for losers that improved;
+        # a winner that degrades is caught by its own EWMA)
+        self.router_probe_every = _env_int("REPRO_RT_PROBE_EVERY", 32)
+        # EWMA smoothing for per-backend latency estimates
+        self.router_alpha = _env_float("REPRO_RT_ALPHA", 0.3)
+        # first N observations per (signature, backend) are discarded
+        # from the EWMA: they carry trace/compile time, not steady-state
+        # latency (they still advance the warmup counter)
+        self.router_discard = _env_int("REPRO_RT_DISCARD", 1)
+        # ring-buffer length of the per-decision log in runtime_report()
+        self.router_log_size = _env_int("REPRO_RT_LOG_SIZE", 256)
+
+        ######## Batch-shape tuner ########
+        # launches a bucket needs before it can be retired (or retire
+        # a rival); compile-discard launches do not count
+        self.tuner_min_samples = _env_int("REPRO_RT_TUNER_MIN_SAMPLES", 3)
+        # bucket B is retired when its per-slot time exceeds a smaller
+        # active bucket's by this factor — batching that measures slower
+        # than less batching is pure loss
+        self.tuner_margin = _env_float("REPRO_RT_TUNER_MARGIN", 1.1)
+        self.tuner_alpha = _env_float("REPRO_RT_TUNER_ALPHA", 0.3)
+        # first N launches per bucket shape are compile-heavy; discard
+        self.tuner_discard = _env_int("REPRO_RT_TUNER_DISCARD", 1)
+
+        ######## Micro-batching ########
+        # static batch-shape menu (Engine pads buckets up to these); the
+        # tuner retires entries it measures as regressions
+        self.batch_shapes = _env_shapes("REPRO_RT_BATCH_SHAPES",
+                                        (1, 2, 4, 8, 16, 32))
+        self.max_batch = _env_int("REPRO_RT_MAX_BATCH", 32)
+        self.flush_ms = _env_float("REPRO_RT_FLUSH_MS", 2.0)
+
+        # injectable time source (seconds); every latency the router or
+        # tuner ever sees is measured through this
+        self.clock = clock
+
+        for name, value in overrides.items():
+            if not hasattr(self, name):
+                raise ValueError(f"unknown RuntimeConfig knob {name!r}")
+            setattr(self, name, value)
+        if isinstance(self.batch_shapes, (list, tuple)):
+            self.batch_shapes = tuple(sorted(set(int(s)
+                                                 for s in self.batch_shapes)))
+        if not self.batch_shapes or min(self.batch_shapes) < 1:
+            raise ValueError("batch_shapes must be positive ints")
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-friendly view of every knob (for ``runtime_report()``)."""
+        return {k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in vars(self).items() if k != "clock"}
+
+
+#: Process-wide default instance (alpa's ``global_config`` idiom).
+#: Engines constructed without an explicit ``runtime=`` share it.
+runtime_config = RuntimeConfig()

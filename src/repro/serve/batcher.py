@@ -72,6 +72,16 @@ class MicroBatcher:
         self._queues: "OrderedDict[str, List[PendingQuery]]" = OrderedDict()
 
     # -- queue state -----------------------------------------------------------
+    def effective_max_batch(self) -> int:
+        """The live bucket bound: ``max_batch`` capped by the largest
+        batch shape the engine's tuner still considers worth launching —
+        once a shape is retired as a measured regression, letting buckets
+        fill to it would only split into smaller chunks anyway, while the
+        earlier requests waited for nothing."""
+        limit = getattr(self.engine, "max_active_batch", None)
+        return min(self.max_batch, limit()) if limit is not None \
+            else self.max_batch
+
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
@@ -100,7 +110,7 @@ class MicroBatcher:
         # Auto-flushes swallow execution errors: the caller of THIS submit
         # must still receive its ticket; every failed request's ticket
         # carries the error and result() re-raises it.
-        if len(self._queues[sig]) >= self.max_batch:
+        if len(self._queues[sig]) >= self.effective_max_batch():
             try:
                 self.flush_group(sig)
             except Exception:

@@ -21,7 +21,10 @@ stable serving-layer entry point:
   without touching data and counted in the metrics.
 * **Engine selection.**  Any registered ExecutionBackend: ``"eager"``
   (host numpy), ``"jit"`` (static-shape XLA programs) or
-  ``"distributed"`` (shard_map over a mesh) out of the box.
+  ``"distributed"`` (shard_map over a mesh) out of the box — or
+  ``"auto"``, which routes each template to the backend its measured
+  latencies favor (:mod:`repro.runtime`; ``runtime_report()`` shows
+  every decision).
 * **Metrics.**  Latency percentiles, plan-cache hit rate, empty-answer
   count, rows served, batch occupancy / padding waste / queue latency —
   what an operator dashboards (definitions in docs/serving.md).
@@ -62,12 +65,17 @@ class SparqlServer:
                  layout: str = "extvp",
                  backend: str = "eager", mesh=None,
                  plan_cache_size: int = 512,
-                 max_batch: int = 32, flush_ms: float = 2.0,
+                 max_batch: Optional[int] = None,
+                 flush_ms: Optional[float] = None,
                  batch_shapes: Optional[Sequence[int]] = None,
-                 eager_load: bool = False, verify_store: bool = False):
-        if backend not in available_backends():
+                 eager_load: bool = False, verify_store: bool = False,
+                 runtime=None):
+        # "auto" is the adaptive runtime, not a registry key: the engine
+        # routes each template to the measured-fastest registered backend
+        if backend != "auto" and backend not in available_backends():
             raise ValueError(
-                f"unknown backend {backend!r}; available: {available_backends()}")
+                f"unknown backend {backend!r}; available: "
+                f"{available_backends()} (or 'auto')")
         # Engine.__init__ (reached below) fails fast on backend="distributed"
         # with mesh=None — a server booted without a mesh must raise here at
         # construction, never accept traffic and error per-request.
@@ -80,9 +88,13 @@ class SparqlServer:
                                    dictionary=catalog.dictionary)
         self.engine: Engine = self.dataset.engine(
             backend, layout=layout, mesh=mesh,
-            plan_cache_size=plan_cache_size, batch_shapes=batch_shapes)
-        self.batcher = MicroBatcher(self.engine, max_batch=max_batch,
-                                    flush_ms=flush_ms)
+            plan_cache_size=plan_cache_size, batch_shapes=batch_shapes,
+            runtime=runtime)
+        cfg = self.engine.config
+        self.batcher = MicroBatcher(
+            self.engine,
+            max_batch=cfg.max_batch if max_batch is None else max_batch,
+            flush_ms=cfg.flush_ms if flush_ms is None else flush_ms)
         self.catalog = catalog
         self.layout = layout
         self.backend = backend
@@ -91,6 +103,12 @@ class SparqlServer:
     @property
     def metrics(self) -> ServerMetrics:
         return self.engine.metrics
+
+    def runtime_report(self):
+        """Snapshot of the adaptive runtime: per-template routing state,
+        batch-shape menu and per-bucket stats, knob values, and the
+        serving metrics (see docs/serving.md, "Adaptive runtime")."""
+        return self.engine.runtime_report()
 
     # Back-compat views of the (now unified, bounded) prepared-query LRU.
     @property

@@ -1,0 +1,399 @@
+"""Adaptive execution runtime (repro.runtime): deterministic router and
+tuner behavior under an injected clock with scripted latencies, config
+env/kwarg plumbing, and Engine / SparqlServer integration under
+``backend="auto"`` (parity against an eager oracle, exclusion of failed
+and fallback backends, runtime_report shape)."""
+
+import numpy as np
+import pytest
+
+from repro.engine import Dataset, template_signature
+from repro.runtime import (
+    BackendRouter, BatchTuner, RouteDecision, RuntimeConfig,
+)
+
+
+class FakeClock:
+    """Deterministic time source; advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, seconds):
+        self.t += seconds
+
+
+def _cfg(**kw):
+    kw.setdefault("clock", FakeClock())
+    return RuntimeConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ds(watdiv_small):
+    cat, d, sch = watdiv_small
+    return Dataset(catalog=cat, dictionary=d, schema=sch)
+
+
+SIG = "SELECT * WHERE { ?u <p> ?v }"
+
+
+def _drive(router, sig, latencies, n):
+    """Run n scripted requests: decide, then observe the scripted
+    latency of whichever backend was chosen.  Returns the decisions."""
+    out = []
+    for _ in range(n):
+        d = router.decide(sig)
+        router.observe(sig, d.backend, latencies[d.backend],
+                       reason=d.reason)
+        out.append(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig
+# ---------------------------------------------------------------------------
+
+def test_config_env_overrides(monkeypatch):
+    monkeypatch.setenv("REPRO_RT_WARMUP", "7")
+    monkeypatch.setenv("REPRO_RT_BATCH_SHAPES", "8,1,4")
+    cfg = RuntimeConfig()
+    assert cfg.router_warmup == 7
+    assert cfg.batch_shapes == (1, 4, 8)        # sorted, deduped
+
+
+def test_config_kwargs_beat_env(monkeypatch):
+    monkeypatch.setenv("REPRO_RT_WARMUP", "7")
+    assert RuntimeConfig(router_warmup=3).router_warmup == 3
+
+
+def test_config_unknown_knob_raises():
+    with pytest.raises(ValueError, match="unknown RuntimeConfig knob"):
+        RuntimeConfig(router_warmupp=3)
+
+
+def test_config_bad_shapes_raise(monkeypatch):
+    with pytest.raises(ValueError):
+        RuntimeConfig(batch_shapes=())
+    monkeypatch.setenv("REPRO_RT_BATCH_SHAPES", "0,4")
+    with pytest.raises(ValueError):
+        RuntimeConfig()
+
+
+def test_config_snapshot_is_json_friendly():
+    snap = _cfg(batch_shapes=(1, 2)).snapshot()
+    assert "clock" not in snap
+    assert snap["batch_shapes"] == [1, 2]
+    import json
+    json.dumps(snap)                            # must not raise
+
+
+# ---------------------------------------------------------------------------
+# BackendRouter: scripted-latency unit tests
+# ---------------------------------------------------------------------------
+
+def test_router_converges_to_fast_backend():
+    cfg = _cfg(router_warmup=2, router_discard=1, router_probe_every=0)
+    r = BackendRouter(("eager", "jit"), cfg)
+    decisions = _drive(r, SIG, {"eager": 1.0, "jit": 0.2}, 12)
+    # warmup = (warmup + discard) per backend = 6 requests, then exploit
+    assert [d.reason for d in decisions[:6]] == ["warmup"] * 6
+    assert all(d == RouteDecision("jit", "measured")
+               for d in decisions[6:])
+    st = r.report()["signatures"][SIG]
+    assert st["choice"] == "jit" and st["reason"] == "measured"
+    # warmup measured each backend 3 times; exploitation keeps sampling
+    # only the winner
+    assert st["samples"]["eager"] == 3 and st["samples"]["jit"] == 9
+
+
+def test_router_decisions_deterministic():
+    """Same scripted history -> identical decision sequence."""
+    lat = {"eager": 0.4, "jit": 0.9}
+    runs = []
+    for _ in range(2):
+        r = BackendRouter(("eager", "jit"),
+                          _cfg(router_warmup=1, router_discard=0,
+                               router_probe_every=4))
+        runs.append([(d.backend, d.reason)
+                     for d in _drive(r, SIG, lat, 20)])
+    assert runs[0] == runs[1]
+
+
+def test_router_discard_excludes_compile_sample():
+    cfg = _cfg(router_warmup=1, router_discard=1, router_probe_every=0)
+    r = BackendRouter(("eager", "jit"), cfg)
+    # first jit sample is compile-heavy; it must not poison the estimate
+    r.observe(SIG, "jit", 250.0)
+    r.observe(SIG, "jit", 0.2)
+    r.observe(SIG, "eager", 1.0)
+    r.observe(SIG, "eager", 1.0)
+    st = r.report()["signatures"][SIG]
+    assert st["ewma_ms"]["jit"] == pytest.approx(0.2)
+    assert r.decide(SIG) == RouteDecision("jit", "measured")
+
+
+def test_router_winner_drift_switches_seat():
+    """A winner that degrades loses the seat through its own EWMA —
+    and the reversal is counted as a switch."""
+    cfg = _cfg(router_warmup=1, router_discard=0, router_alpha=0.5,
+               router_probe_every=0)
+    r = BackendRouter(("eager", "jit"), cfg)
+    lat = {"eager": 1.0, "jit": 0.2}
+    _drive(r, SIG, lat, 4)
+    assert r.peek(SIG).backend == "jit"
+    lat["jit"] = 6.0                             # drift: jit degrades
+    decisions = _drive(r, SIG, lat, 6)
+    assert decisions[-1] == RouteDecision("eager", "measured")
+    st = r.report()["signatures"][SIG]
+    assert st["switches"] >= 1
+
+
+def test_router_probe_rediscovers_improved_loser():
+    """Exploit never starves measurement: every probe_every-th request
+    re-measures a loser, so one that improved wins the seat back."""
+    cfg = _cfg(router_warmup=1, router_discard=0, router_alpha=0.5,
+               router_probe_every=4)
+    r = BackendRouter(("eager", "jit"), cfg)
+    lat = {"eager": 0.3, "jit": 2.0}
+    _drive(r, SIG, lat, 3)
+    assert r.peek(SIG).backend == "eager"
+    lat["jit"] = 0.05                            # loser improves
+    decisions = _drive(r, SIG, lat, 12)
+    assert any(d.reason == "probe" and d.backend == "jit"
+               for d in decisions)
+    assert r.peek(SIG).backend == "jit"
+
+
+def test_router_never_routes_to_excluded_backend():
+    cfg = _cfg(router_warmup=2, router_probe_every=2)
+    r = BackendRouter(("eager", "jit"), cfg)
+    r.mark_failed(SIG, "jit")
+    decisions = _drive(r, SIG, {"eager": 1.0, "jit": 0.1}, 16)
+    assert all(d.backend == "eager" for d in decisions)
+    r2 = BackendRouter(("eager", "jit"), cfg)
+    r2.mark_fallback(SIG, "jit")
+    assert all(d.backend == "eager"
+               for d in _drive(r2, SIG, {"eager": 1.0, "jit": 0.1}, 16))
+
+
+def test_router_exclusion_is_per_signature():
+    r = BackendRouter(("eager", "jit"), _cfg(router_warmup=1,
+                                             router_discard=0))
+    r.mark_failed(SIG, "jit")
+    other = "SELECT * WHERE { ?a <q> ?b }"
+    assert "jit" in r.eligible(other)
+    assert "jit" not in r.eligible(SIG)
+
+
+def test_router_decision_log_bounded():
+    cfg = _cfg(router_log_size=8, router_warmup=1, router_discard=0)
+    r = BackendRouter(("eager", "jit"), cfg)
+    _drive(r, SIG, {"eager": 1.0, "jit": 0.5}, 50)
+    assert len(r.report()["decisions"]) == 8
+
+
+# ---------------------------------------------------------------------------
+# BatchTuner: scripted-launch unit tests
+# ---------------------------------------------------------------------------
+
+def test_tuner_retires_measured_slow_bucket():
+    """A bucket whose per-slot time is beaten by a smaller bucket past
+    the margin is retired — the serve-throughput batch-32 regression,
+    discovered rather than hard-coded away."""
+    cfg = _cfg(tuner_min_samples=3, tuner_discard=1, tuner_margin=1.1)
+    t = BatchTuner((1, 8, 32), cfg)
+    for _ in range(4):                           # 1 discard + 3 counted
+        t.observe(8, 8, 8 * 0.1)                 # 0.10 ms / slot
+        t.observe(32, 20, 32 * 0.25)             # 0.25 ms / slot: slower
+    assert t.active_shapes() == (1, 8)
+    assert t.max_shape() == 8
+    assert t.bucket_for(20) == 8                 # callers chunk above max
+    rep = t.report()
+    assert "32" in rep["retired"]
+    assert rep["buckets"]["32"]["retired"] is not None
+
+
+def test_tuner_needs_min_samples_before_retiring():
+    cfg = _cfg(tuner_min_samples=3, tuner_discard=0, tuner_margin=1.1)
+    t = BatchTuner((8, 32), cfg)
+    t.observe(8, 8, 0.8)
+    t.observe(32, 32, 32.0)                      # looks awful, once
+    t.observe(8, 8, 0.8)
+    t.observe(32, 32, 32.0)                      # twice — still < 3
+    assert t.active_shapes() == (8, 32)
+
+
+def test_tuner_smallest_shape_never_retired():
+    cfg = _cfg(tuner_min_samples=1, tuner_discard=0, tuner_margin=1.0)
+    t = BatchTuner((1, 4), cfg)
+    for _ in range(5):
+        t.observe(1, 1, 50.0)                    # tiny bucket, terrible
+        t.observe(4, 4, 0.4)
+    assert 1 in t.active_shapes()
+
+
+def test_tuner_discard_excludes_compile_launch():
+    cfg = _cfg(tuner_min_samples=1, tuner_discard=1, tuner_margin=1.5)
+    t = BatchTuner((4, 8), cfg)
+    t.observe(8, 8, 800.0)                       # trace/compile launch
+    t.observe(8, 8, 0.8)
+    assert t.report()["buckets"]["8"]["per_slot_ms"] == pytest.approx(0.1)
+
+
+def test_tuner_bucket_for_matches_menu():
+    t = BatchTuner((1, 2, 4, 8, 16, 32), _cfg())
+    assert [t.bucket_for(n) for n in (1, 2, 3, 5, 8, 9, 32, 100)] == \
+        [1, 2, 4, 8, 8, 16, 32, 32]
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: backend="auto"
+# ---------------------------------------------------------------------------
+
+Q_FOLLOWS = ("SELECT * WHERE {{ wsdbm:User{0} wsdbm:follows ?v . "
+             "?v sorg:email ?e }}")
+Q_LIKES = ("SELECT ?p WHERE {{ wsdbm:User{0} wsdbm:likes ?v . "
+           "?v sorg:price ?p }}")
+
+
+def test_auto_batched_matches_sequential_eager(ds):
+    """Whatever the router decides, answers must match the eager oracle
+    on both the single-request and the micro-batched path."""
+    oracle = ds.engine("eager")
+    eng = ds.engine(
+        "auto", runtime=RuntimeConfig(router_warmup=1, router_discard=0,
+                                      router_probe_every=3))
+    queries = [Q_FOLLOWS.format(u % 7) for u in range(11)] + \
+              [Q_LIKES.format(u % 5) for u in range(9)]
+    for q in queries:
+        assert eng.query(q).same_as(oracle.query(q)), q
+    for q, got in zip(queries, eng.query_batch(queries)):
+        assert got.same_as(oracle.query(q)), q
+    rep = eng.runtime_report()
+    assert rep["backend"] == "auto" and rep["auto"]
+    # both backends were actually exercised during warmup
+    routed = rep["metrics"]["routed"]
+    assert routed.get("eager", 0) > 0 and routed.get("jit", 0) > 0
+    ds._engines.clear()
+
+
+def test_auto_never_routes_to_failing_backend(ds):
+    """A backend whose prepare raises is excluded for that signature and
+    the request is still answered (deterministic fallback)."""
+    eng = ds.engine(
+        "auto", runtime=RuntimeConfig(router_warmup=1, router_discard=0))
+    oracle = ds.engine("eager")
+
+    def boom(template, ctx):
+        raise RuntimeError("injected prepare failure")
+
+    eng._backends["jit"].prepare = boom
+    q = Q_FOLLOWS.format(1)
+    for _ in range(6):
+        assert eng.query(q).same_as(oracle.query(q))
+    st = eng.router.report()["signatures"][template_signature(q)]
+    assert st["failed"] == ["jit"]
+    assert eng.metrics.routed == {"eager": 6}
+    ds._engines.clear()
+
+
+def test_auto_excludes_device_fallback_preparations(ds):
+    """A template the device path cannot express (prepared.fallback) is
+    never routed to the device backend — eager latencies must not be
+    measured under the jit label."""
+    eng = ds.engine(
+        "auto", runtime=RuntimeConfig(router_warmup=1, router_discard=0))
+    q = ("SELECT * WHERE { ?v0 wsdbm:likes ?v1 . "
+         "OPTIONAL { ?v0 sorg:email ?e } }")
+    for _ in range(4):
+        eng.query(q)
+    st = eng.router.report()["signatures"][template_signature(q)]
+    assert st["fallback"] == ["jit"]
+    assert st["choice"] == "eager"
+    assert eng.metrics.device_fallbacks == 0
+    ds._engines.clear()
+
+
+def test_explain_reports_plan_and_route(ds):
+    eng = ds.engine("auto", runtime=RuntimeConfig(router_warmup=1,
+                                                  router_discard=0))
+    q = Q_FOLLOWS.format(2)
+    text = eng.explain(q)
+    assert "backend: " in text
+    assert "(warmup" in text                     # nothing measured yet
+    for _ in range(4):
+        eng.query(q)
+    text = eng.explain(q)
+    assert "(measured; measured " in text or "(probe" in text
+    static = ds.engine("eager")
+    assert "backend: eager (forced)" in static.explain(q)
+    ds._engines.clear()
+
+
+def test_engine_default_config_is_shared_global(ds):
+    from repro.runtime.config import runtime_config
+    eng = ds.engine("eager")
+    assert eng.config is runtime_config
+    ds._engines.clear()
+
+
+def test_runtime_report_shape(ds):
+    eng = ds.engine("auto", runtime=RuntimeConfig())
+    eng.query(Q_FOLLOWS.format(3))
+    rep = eng.runtime_report()
+    assert set(rep) == {"backend", "auto", "router", "tuner", "config",
+                        "metrics"}
+    assert set(rep["router"]) == {"backends", "signatures", "decisions"}
+    assert set(rep["tuner"]) == {"menu", "active", "retired", "buckets"}
+    assert rep["config"]["router_warmup"] == rep["config"]["router_warmup"]
+    import json
+    json.dumps(rep)                              # operator-facing: JSON-able
+    ds._engines.clear()
+
+
+def test_retired_shape_shrinks_batcher_bound(ds):
+    from repro.serve import MicroBatcher
+    eng = ds.engine("auto", runtime=RuntimeConfig(
+        tuner_min_samples=1, tuner_discard=0), batch_shapes=(1, 4, 16))
+    for _ in range(2):
+        eng.tuner.observe(4, 4, 0.4)             # 0.1 ms / slot
+        eng.tuner.observe(16, 16, 8.0)           # 0.5 ms / slot: retire
+    assert eng.max_active_batch() == 4
+    b = MicroBatcher(eng, max_batch=32)
+    assert b.effective_max_batch() == 4
+    ds._engines.clear()
+
+
+# ---------------------------------------------------------------------------
+# SparqlServer integration
+# ---------------------------------------------------------------------------
+
+def test_server_auto_end_to_end(watdiv_small):
+    from repro.serve import SparqlServer
+    cat, d, sch = watdiv_small
+    srv = SparqlServer(cat, backend="auto",
+                       runtime=RuntimeConfig(router_warmup=1,
+                                             router_discard=0))
+    oracle = SparqlServer(cat, backend="eager")
+    queries = [Q_FOLLOWS.format(u % 6) for u in range(10)]
+    tickets = [srv.submit(q) for q in queries]
+    srv.flush()
+    for q, t in zip(queries, tickets):
+        assert t.done() and t.result().same_as(oracle.query(q))
+    rep = srv.runtime_report()
+    assert rep["backend"] == "auto"
+    assert rep["metrics"]["served"] == 10
+    sig = template_signature(queries[0])
+    assert sig in rep["router"]["signatures"]
+    # the metrics object exposes the same snapshot without the engine
+    assert srv.metrics.runtime_report()["backend"] == "auto"
+
+
+def test_server_rejects_unknown_backend(watdiv_small):
+    from repro.serve import SparqlServer
+    cat, d, sch = watdiv_small
+    with pytest.raises(ValueError, match="unknown backend"):
+        SparqlServer(cat, backend="warp")
