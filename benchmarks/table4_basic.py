@@ -1,16 +1,84 @@
 """Paper Table 4 / Fig. 14: Basic Testing (star/linear/snowflake/complex),
 ExtVP vs VP vs TT vs PT (Sempala-style) layouts, AM runtime over template
-instantiations and per-category aggregates."""
+instantiations and per-category aggregates.
+
+Doubles as the **device-coverage gate**: the full basic suite is re-run
+on the jit and distributed backends and every query must execute on the
+device — ``device_fallbacks`` is asserted 0 per backend, so a coverage
+regression (an operator silently bailing back to the eager host path)
+fails the benchmark and with it the ``tests-pallas`` CI job.
+
+Emits ``BENCH_table4_basic.json``::
+
+    {"scale": ..., "n_queries": ...,
+     "device_gate": {backend: {"templates": {name: am_seconds},
+                               "device_fallbacks": 0}, ...}}
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import time
 from collections import defaultdict
+from typing import Dict, Optional
 
-from benchmarks.common import Csv, catalog, dataset, time_query
+from benchmarks.common import Csv, catalog, dataset, facade, time_query
 from repro.rdf.workloads import basic_queries
 
+DEFAULT_OUT = "BENCH_table4_basic.json"
 
-def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
+
+def device_gate(scale: float = 1.0, csv: Optional[Csv] = None,
+                out_path: str = DEFAULT_OUT) -> Dict[str, object]:
+    """Run the FULL basic suite on every device backend and assert that
+    no query fell back to the eager host engine (the fallback classes —
+    OPTIONAL, UNION, unbound predicates, all modifier spines — compile
+    now; nonzero here is a regression)."""
+    import jax
+
+    from repro.engine import Engine
+
+    ds = facade(scale)
+    queries = basic_queries(ds.schema, seed=42, n_instances=3)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    engines = {
+        "jit": Engine(ds, backend="jit"),
+        "distributed": Engine(ds, backend="distributed", mesh=mesh),
+    }
+    n_queries = sum(len(v) for v in queries.values())
+    gate: Dict[str, object] = {}
+    for bname, eng in engines.items():
+        templates: Dict[str, float] = {}
+        for name, instances in queries.items():
+            times = []
+            for qtext in instances:
+                best = float("inf")
+                for _ in range(2):
+                    t0 = time.perf_counter()
+                    eng.query(qtext)
+                    best = min(best, time.perf_counter() - t0)
+                times.append(best)
+            templates[name] = sum(times) / len(times)
+        fallbacks = eng.metrics.device_fallbacks
+        assert fallbacks == 0, (
+            f"{bname}: {fallbacks} of {n_queries} basic-suite queries "
+            f"fell back to the eager host path — device coverage "
+            f"regression")
+        gate[bname] = {"templates": templates, "device_fallbacks": fallbacks}
+        if csv is not None:
+            am = sum(templates.values()) / len(templates)
+            csv.add(f"table4/device-gate/{bname}", am,
+                    f"n={n_queries} fallbacks=0")
+    report = {"scale": scale, "n_queries": n_queries, "device_gate": gate}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
+
+
+def run(scale: float = 1.0, csv: Csv | None = None,
+        out_path: str = DEFAULT_OUT) -> Csv:
     csv = csv or Csv()
     tt, d, sch = dataset(scale)
     cat = catalog(scale)
@@ -39,8 +107,14 @@ def run(scale: float = 1.0, csv: Csv | None = None) -> Csv:
         for layout, times in layouts.items():
             am = sum(times) / len(times)
             csv.add(f"table4/AM-{shape}/{layout}", am, f"n={len(times)}")
+
+    device_gate(scale, csv=csv, out_path=out_path)
     return csv
 
 
 if __name__ == "__main__":
-    run().emit()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(scale=args.scale, out_path=args.out).emit()

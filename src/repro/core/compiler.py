@@ -22,15 +22,17 @@ The produced :class:`Plan` is declarative — a join-ordered list of
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 from repro.core.algebra import (
-    BGP, CORR_OS, CORR_SO, CORR_SS, TriplePattern, correlations, is_var,
-    tp_vars,
+    BGP, CORR_OS, CORR_SO, CORR_SS, Filter, FilterExpr, JoinPair, LeftJoin,
+    Node, TriplePattern, UnionOp, correlations, is_var, tp_vars,
 )
 from repro.core.stats import Catalog
 
-__all__ = ["ScanStep", "Plan", "select_table", "compile_bgp"]
+__all__ = ["ScanStep", "Plan", "select_table", "compile_bgp",
+           "BGPSeg", "EmptySeg", "FilterSeg", "CombineSeg", "CorePlan",
+           "compile_core", "core_filter_exprs", "seg_vars"]
 
 MISSING_TERM = -2
 
@@ -150,3 +152,188 @@ def compile_bgp(bgp: BGP, catalog: Catalog, layout: str = "extvp") -> Plan:
         bound_vars |= set(tp_vars(nxt))
 
     return Plan(steps=ordered, vars=bgp.vars())
+
+
+# ---------------------------------------------------------------------------
+# Core plans: pattern trees (OPTIONAL / UNION / FILTER over BGPs) compiled
+# for the static-shape device executors.
+#
+# A *core* is the graph-pattern part of a query (the tree under the
+# solution-modifier spine).  The device engines execute it as a tree of
+# segments over ONE flat join-ordered scan list:
+#
+#   * ``BGPSeg``     — a compiled BGP (Algorithm 4 plan) whose steps live
+#                      at ``[start, start + len(plan.steps))`` in the flat
+#                      plan, so constant re-binding stays a single
+#                      ``(n_steps, 2)`` runtime bounds array;
+#   * ``FilterSeg``  — a FILTER applied to its child's relation;
+#   * ``CombineSeg`` — join / left-outer join (OPTIONAL) / union of two
+#                      child segments;
+#   * ``EmptySeg``   — a statistics-proven empty subtree (SF = 0 or a
+#                      missing term), kept in the tree because OPTIONAL
+#                      and UNION survive an empty operand.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BGPSeg:
+    """A compiled BGP; ``start`` is its offset in ``CorePlan.flat``."""
+
+    plan: Plan
+    start: int = 0
+
+
+@dataclass
+class EmptySeg:
+    """Statistics-proven empty subtree (vars kept for column layout)."""
+
+    vars: Tuple[str, ...] = ()
+
+
+@dataclass
+class FilterSeg:
+    child: "CoreSeg"
+    expr: FilterExpr
+
+
+@dataclass
+class CombineSeg:
+    kind: str                 # 'join' | 'left' | 'union'
+    left: "CoreSeg"
+    right: "CoreSeg"
+    expr: Optional[FilterExpr] = None   # OPTIONAL's join condition
+
+
+CoreSeg = Union[BGPSeg, EmptySeg, FilterSeg, CombineSeg]
+
+
+@dataclass
+class CorePlan:
+    """A segment tree plus the flat scan plan the segments index into.
+
+    ``flat`` is what template re-binding operates on
+    (:func:`repro.engine.template.rebind_plan` /
+    :func:`repro.core.jexec.bounds_from_plan` are tree-agnostic: scan
+    constants are positional over the flat step list).
+    """
+
+    root: CoreSeg
+    flat: Plan
+    empty: bool
+    vars: Tuple[str, ...]
+
+    def describe(self) -> str:
+        if self.empty:
+            return "EMPTY (statistics short-circuit)"
+
+        def rec(seg: CoreSeg) -> str:
+            if isinstance(seg, BGPSeg):
+                return seg.plan.describe()
+            if isinstance(seg, EmptySeg):
+                return "EMPTY"
+            if isinstance(seg, FilterSeg):
+                return f"FILTER({rec(seg.child)})"
+            op = {"join": "⋈", "left": "⟕", "union": "∪"}[seg.kind]
+            return f"({rec(seg.left)} {op} {rec(seg.right)})"
+
+        return rec(self.root)
+
+
+def seg_vars(seg: CoreSeg) -> Tuple[str, ...]:
+    """Variables a segment's relation binds, in column order (the order
+    the device pipeline produces: left-to-right, first-seen)."""
+    if isinstance(seg, EmptySeg):
+        return tuple(seg.vars)
+    if isinstance(seg, BGPSeg):
+        return seg.plan.vars
+    if isinstance(seg, FilterSeg):
+        return seg_vars(seg.child)
+    left = seg_vars(seg.left)
+    return left + tuple(v for v in seg_vars(seg.right) if v not in left)
+
+
+def core_filter_exprs(seg: CoreSeg) -> List[FilterExpr]:
+    """Filter expressions of a core in evaluation order — the order the
+    traced program consumes their constant slots (child before own
+    expression; combine children left before right before the OPTIONAL
+    condition).  Prepended to the spine's filters when building the
+    shared runtime ``fconsts`` vector."""
+    if isinstance(seg, FilterSeg):
+        return core_filter_exprs(seg.child) + [seg.expr]
+    if isinstance(seg, CombineSeg):
+        out = core_filter_exprs(seg.left) + core_filter_exprs(seg.right)
+        if seg.expr is not None:
+            out.append(seg.expr)
+        return out
+    return []
+
+
+def compile_core(node: Node, catalog: Catalog,
+                 layout: str = "extvp") -> CorePlan:
+    """Compile a graph-pattern tree into a :class:`CorePlan`.
+
+    Two phases: (1) bottom-up build with emptiness pruning — a
+    statistics-empty BGP collapses to :class:`EmptySeg` and the pruning
+    respects operator identity (a join with an empty operand is empty; a
+    left join survives an empty RIGHT side — its left rows pass through
+    UNBOUND-padded; a union survives either side empty); (2) flat-offset
+    assignment over the pruned tree, so discarded subtrees contribute no
+    scan steps, no capacities and no bounds rows.
+
+    Raises ``NotImplementedError`` for node kinds outside the device
+    fragment — the backends' fall-back-to-eager signal.
+    """
+
+    def build(n: Node) -> CoreSeg:
+        if isinstance(n, BGP):
+            plan = compile_bgp(n, catalog, layout)
+            if plan.empty:
+                return EmptySeg(vars=plan.vars)
+            return BGPSeg(plan=plan)
+        if isinstance(n, Filter):
+            child = build(n.child)
+            if isinstance(child, EmptySeg):
+                return child
+            return FilterSeg(child=child, expr=n.expr)
+        if isinstance(n, JoinPair):
+            left, right = build(n.left), build(n.right)
+            if isinstance(left, EmptySeg) or isinstance(right, EmptySeg):
+                lv = seg_vars(left)
+                return EmptySeg(vars=lv + tuple(
+                    v for v in seg_vars(right) if v not in lv))
+            return CombineSeg(kind="join", left=left, right=right)
+        if isinstance(n, LeftJoin):
+            left, right = build(n.left), build(n.right)
+            if isinstance(left, EmptySeg):
+                lv = seg_vars(left)
+                return EmptySeg(vars=lv + tuple(
+                    v for v in seg_vars(right) if v not in lv))
+            return CombineSeg(kind="left", left=left, right=right,
+                              expr=n.expr)
+        if isinstance(n, UnionOp):
+            left, right = build(n.left), build(n.right)
+            if isinstance(left, EmptySeg) and isinstance(right, EmptySeg):
+                lv = seg_vars(left)
+                return EmptySeg(vars=lv + tuple(
+                    v for v in seg_vars(right) if v not in lv))
+            return CombineSeg(kind="union", left=left, right=right)
+        raise NotImplementedError(
+            f"device core does not cover {type(n).__name__}")
+
+    root = build(node)
+
+    flat_steps: List[ScanStep] = []
+
+    def assign(seg: CoreSeg) -> None:
+        if isinstance(seg, BGPSeg):
+            seg.start = len(flat_steps)
+            flat_steps.extend(seg.plan.steps)
+        elif isinstance(seg, FilterSeg):
+            assign(seg.child)
+        elif isinstance(seg, CombineSeg):
+            assign(seg.left)
+            assign(seg.right)
+
+    assign(root)
+    empty = isinstance(root, EmptySeg)
+    flat = Plan(steps=flat_steps, empty=empty, vars=seg_vars(root))
+    return CorePlan(root=root, flat=flat, empty=empty, vars=flat.vars)

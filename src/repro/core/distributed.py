@@ -42,12 +42,16 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core.algebra import is_var
-from repro.core.compiler import Plan, ScanStep
+from repro.core.compiler import (
+    BGPSeg, CombineSeg, CorePlan, CoreSeg, EmptySeg, FilterSeg, Plan,
+    ScanStep, core_filter_exprs,
+)
 from repro.core.jexec import (
-    A_NULL, A_SENT, B_NULL, B_SENT, JBindings, bounds_from_plan, check_spine,
-    device_distinct, device_filter, device_join, device_order, device_project,
-    device_resize, device_scan, device_slice, double_caps, _compact,
-    _mod_cap_seed, _pipeline_cols, _step_meta, _valid_mask,
+    JBindings, bounds_from_plan, check_spine, device_distinct,
+    device_filter, device_join, device_left_join, device_order,
+    device_project, device_resize, device_scan, device_scan_tt,
+    device_slice, device_union, double_caps, prepare_value_keys, _compact,
+    _exec_cols, _mod_cap_seed, _step_meta, _tt_meta, _valid_mask,
 )
 from repro.core.modifiers import ModifierSpine, filter_const_slots
 from repro.core.stats import Catalog
@@ -75,14 +79,18 @@ def _smap(body, mesh, in_specs, out_specs):
 # Host-side table sharding (storage layout)
 # ---------------------------------------------------------------------------
 
-def shard_table(table: Table, n_shards: int, by: int = 0,
+def shard_table(table, n_shards: int, by: int = 0,
                 min_cap: int = 16) -> Tuple[np.ndarray, np.ndarray]:
-    """Hash-partition rows by column ``by``; returns (rows[S, cap, 2], n[S])."""
-    rows = table.rows
+    """Hash-partition rows by column ``by``; returns (rows[S, cap, k], n[S]).
+
+    Accepts a :class:`repro.core.table.Table` or a raw ``(N, k)`` int32
+    array (the triples table of unbound-predicate scans)."""
+    rows = table.rows if isinstance(table, Table) else np.asarray(table)
+    k = rows.shape[1]
     dest = rows[:, by].astype(np.int64) % n_shards
     counts = np.bincount(dest, minlength=n_shards)
     cap = round_up_pow2(int(counts.max()) if len(rows) else 1, min_cap)
-    out = np.full((n_shards, cap, 2), PAD, dtype=np.int32)
+    out = np.full((n_shards, cap, k), PAD, dtype=np.int32)
     ns = np.zeros(n_shards, dtype=np.int32)
     order = np.argsort(dest, kind="stable")
     sorted_rows, sorted_dest = rows[order], dest[order]
@@ -167,13 +175,19 @@ class DistributedExecutor:
     'model' dimension, so queries use every chip).
     """
 
-    def __init__(self, plan: Plan, catalog: Catalog, mesh: Mesh,
+    def __init__(self, plan, catalog: Catalog, mesh: Mesh,
                  axes: Sequence[str] = ("data",), slack: float = 2.0,
                  dual_partition: bool = False,
                  spine: Optional[ModifierSpine] = None):
-        if plan.empty:
+        if isinstance(plan, CorePlan):
+            core = plan
+        else:
+            core = CorePlan(root=BGPSeg(plan=plan, start=0), flat=plan,
+                            empty=plan.empty, vars=plan.vars)
+        if core.empty:
             raise ValueError("statistics-empty plan")
-        self.plan = plan
+        self.core = core
+        self.plan = core.flat      # what template re-binding operates on
         self.catalog = catalog
         self.mesh = mesh
         self.axes = tuple(axes)
@@ -185,113 +199,245 @@ class DistributedExecutor:
         # relation, so the (small, capacity-bounded) per-shard results
         # are all_gather-ed and the global modifiers run replicated.
         self.spine = spine if spine is not None else ModifierSpine()
-        self._pipe_cols = _pipeline_cols(plan)
+        self._pipe_cols = _exec_cols(core.root)
         self._out_vars = check_spine(self.spine, self._pipe_cols, catalog)
-        self.filter_slots = filter_const_slots(self.spine.filters)
+        # core filters (OPTIONAL conditions, FILTER segments) consume
+        # their fconsts slots first, then the spine's — one shared
+        # runtime vector, evaluation order (see PlanExecutor)
+        self._all_filters = tuple(core_filter_exprs(core.root)) + \
+            tuple(self.spine.filters)
+        self.filter_slots = filter_const_slots(self._all_filters)
+        # raises NotImplementedError (→ counted eager fallback) only for
+        # dictionaries whose numeric keys defeat the double-single pairs
+        self._value_keys = prepare_value_keys(catalog, self.spine,
+                                              self._all_filters)
         self.gathered = self.spine.needs_global
-        if self.gathered and not self._out_vars:
-            raise NotImplementedError(
-                "global modifiers need at least one output column")
 
-        # storage: shard every referenced table by subject (and object)
+        # storage: shard every referenced table by subject (and object);
+        # TT steps (unbound predicates) share one subject-sharded copy of
+        # the triples table
+        plan_f = self.plan
+        tt_sh: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self.table_shards: List[Dict[str, Tuple[np.ndarray, np.ndarray]]] = []
-        self.caps: List[int] = []
-        est = 0.0
-        for i, step in enumerate(plan.steps):
+        sizes: List[float] = []
+        for step in plan_f.steps:
             if step.uses_tt:
-                raise NotImplementedError("distributed TT scans not supported")
+                if tt_sh is None:
+                    tt_sh = shard_table(np.asarray(catalog.tt, np.int32),
+                                        self.n_shards, by=0)
+                self.table_shards.append({"s": tt_sh})
+                sizes.append(float(catalog.n_triples))
+                continue
             t = catalog.table(step.kind, int(step.tp.p), step.p2)
             shards = {"s": shard_table(t, self.n_shards, by=0)}
             if dual_partition:
                 shards["o"] = shard_table(t, self.n_shards, by=1)
             self.table_shards.append(shards)
-            scan_est = max(1.0, float(len(t)) / self.n_shards)
-            if step.tp.n_bound() > 1:
-                scan_est = max(1.0, scan_est * 0.01)
-            est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
-            self.caps.append(round_up_pow2(int(est * slack) + 16, 16))
+            sizes.append(float(len(t)))
+
+        # per-shard capacity seeds: the PlanExecutor estimate chain
+        # divided by the shard count (each shard holds ~1/S of every
+        # relation); combine segments (join/left/union) get their own
+        # slots behind the flat steps, in evaluation (post-) order
+        n_flat = len(plan_f.steps)
+        flat_caps = [16] * n_flat
+        comb_caps: List[int] = []
+        self._comb_index: Dict[int, int] = {}
+
+        def seed(seg: CoreSeg) -> float:
+            if isinstance(seg, EmptySeg):
+                return 1.0
+            if isinstance(seg, FilterSeg):
+                return seed(seg.child)
+            if isinstance(seg, BGPSeg):
+                est = 1.0
+                for k, step in enumerate(seg.plan.steps):
+                    i = seg.start + k
+                    scan_est = max(1.0, sizes[i] / self.n_shards)
+                    if step.tp.n_bound() > 1:
+                        scan_est = max(1.0, scan_est * 0.01)
+                    est = scan_est if k == 0 else \
+                        max(est, scan_est, est * 1.25)
+                    flat_caps[i] = round_up_pow2(int(est * slack) + 16, 16)
+                return est
+            le, re_ = seed(seg.left), seed(seg.right)
+            if seg.kind == "join":
+                est = 1.25 * max(le, re_)
+            elif seg.kind == "left":
+                # inner rows plus (worst case) every left row unmatched
+                est = 1.25 * max(le, re_) + le
+            else:
+                est = le + re_
+            self._comb_index[id(seg)] = n_flat + len(comb_caps)
+            comb_caps.append(round_up_pow2(int(est * slack) + 16, 16))
+            return est
+
+        seed(core.root)
+        self.caps = flat_caps + comb_caps
+        self._n_pipeline = len(self.caps)
         # per-shard resize slot ahead of the gather: the global modifiers
         # then sort/compact S·mod_cap rows instead of S·join_cap (see
         # PlanExecutor; the slot rides the same overflow-retry protocol)
         self._mod_resize = self.gathered
         if self._mod_resize:
-            self.caps.append(_mod_cap_seed(self.spine, self.caps[-1]))
-        self._default_bounds = bounds_from_plan(plan)
+            pipe_cap = max(self.caps) if self.caps else 64
+            self.caps.append(_mod_cap_seed(self.spine, pipe_cap))
+        self._default_bounds = bounds_from_plan(plan_f)
 
         # Which storage copy each scan uses.  Beyond-paper optimization:
         # simulate the plan's join-key sequence and pick the copy whose
         # partition variable IS the upcoming join key — an object-keyed
         # probe then reads the o-partitioned copy and skips the all_to_all
         # entirely (the clustered-index analogue of ExtVP's philosophy:
-        # trade precomputed storage for shuffle bytes).
-        self.scan_copy: List[str] = []
-        acc_cols: List[str] = []
-        for i, step in enumerate(plan.steps):
-            tp = step.tp
-            copy = "s"
-            if dual_partition:
-                join_key = None
-                if i > 0:
-                    scan_vars = [v for v in (tp.s, tp.o) if is_var(v)]
-                    shared = [c for c in acc_cols if c in scan_vars]
-                    join_key = shared[0] if shared else None
-                elif len(plan.steps) > 1:
-                    # first scan: partition by the variable the 2nd step joins on
-                    nxt = plan.steps[1].tp
-                    nxt_vars = {v for v in (nxt.s, nxt.o) if is_var(v)}
-                    for v in (tp.s, tp.o):
-                        if is_var(v) and v in nxt_vars:
-                            join_key = v
-                            break
-                if join_key is not None and is_var(tp.o) and join_key == tp.o:
-                    copy = "o"
-            self.scan_copy.append(copy)
-            for v in (tp.s, tp.o):
-                if is_var(v) and v not in acc_cols:
-                    acc_cols.append(v)
+        # trade precomputed storage for shuffle bytes).  The simulation
+        # only makes sense within one scan/join pipeline, so it applies
+        # when the whole core is a single BGP (FILTER wrappers are
+        # transparent); tree cores read the s-copy everywhere.
+        self.scan_copy: List[str] = ["s"] * n_flat
+        root_bgp: CoreSeg = core.root
+        while isinstance(root_bgp, FilterSeg):
+            root_bgp = root_bgp.child
+        if dual_partition and isinstance(root_bgp, BGPSeg):
+            steps = root_bgp.plan.steps
+            acc_cols: List[str] = []
+            for i, step in enumerate(steps):
+                tp = step.tp
+                if not step.uses_tt:   # the TT copy is subject-sharded only
+                    join_key = None
+                    if i > 0:
+                        scan_vars = [v for v in (tp.s, tp.o) if is_var(v)]
+                        shared = [c for c in acc_cols if c in scan_vars]
+                        join_key = shared[0] if shared else None
+                    elif len(steps) > 1:
+                        # first scan: partition by the 2nd step's join var
+                        nxt = steps[1].tp
+                        nxt_vars = {v for v in (nxt.s, nxt.o) if is_var(v)}
+                        for v in (tp.s, tp.o):
+                            if is_var(v) and v in nxt_vars:
+                                join_key = v
+                                break
+                    if join_key is not None and is_var(tp.o) \
+                            and join_key == tp.o:
+                        self.scan_copy[i] = "o"
+                for v in (tp.s, tp.p, tp.o):
+                    if is_var(v) and v not in acc_cols:
+                        acc_cols.append(v)
 
     # -- traced per-shard program ---------------------------------------------
-    def _shard_program(self, caps, bounds, fconsts, values, *flat_tables):
-        """Returns (data, n, total, per_step_overflow[n_steps]).  Like
-        :meth:`repro.core.jexec.PlanExecutor._compose`, overflow is
-        reported per step so the host retry doubles only the overflowing
-        capacities — one heavy constant must not inflate every buffer for
-        the whole (batched) workload."""
-        plan = self.plan
-        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+    def _shard_index(self) -> jax.Array:
+        """This shard's linear index over the data axes (traced)."""
+        idx = jnp.asarray(0, jnp.int32)
+        for a in self.axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def _scan_step(self, i: int, step: ScanStep, rows, nrows,
+                   bounds) -> DistBindings:
+        """One shard-local scan.  TT steps (unbound predicates) read this
+        shard's slice of the subject-sharded triples table; VP/ExtVP
+        steps read the copy :attr:`scan_copy` picked."""
+        tp = step.tp
+        if step.uses_tt:
+            s_b, p_b, o_b, eqs, take, cols = _tt_meta(tp)
+            sb = bounds[i, 0] if s_b is not None else None
+            ob = bounds[i, 1] if o_b is not None else None
+            data, n, ovf = device_scan_tt(rows, nrows, sb, p_b, ob,
+                                          eqs, take, rows.shape[0])
+            part_var = tp.s if is_var(tp.s) else None
+            return DistBindings(cols, data, n, ovf, part_var)
+        s_bound, o_bound, same, take, cols = _step_meta(step)
+        data, n, ovf = device_scan(rows, nrows,
+                                   bounds[i, 0] if s_bound is not None else None,
+                                   bounds[i, 1] if o_bound is not None else None,
+                                   same, take, rows.shape[0])
+        copy = self.scan_copy[i]
+        part_var = None
+        if copy == "s" and is_var(tp.s):
+            part_var = tp.s
+        elif copy == "o" and is_var(tp.o):
+            part_var = tp.o
+        return DistBindings(cols, data, n, ovf, part_var)
+
+    def _compose_bgp(self, seg: BGPSeg, caps, flat_tables, bounds, ovfs,
+                     axis) -> DistBindings:
+        """The shard-local scan/join pipeline of one BGP segment; records
+        each step's overflow at its flat index (see PlanExecutor)."""
+        no = jnp.asarray(False)
+        if not seg.plan.steps:
+            # empty BGP: the unit relation (one empty solution mapping)
+            # lives on shard 0 — anywhere else it would be counted S times
+            n = (self._shard_index() == 0).astype(jnp.int32)
+            return DistBindings((), jnp.zeros((8, 0), jnp.int32), n, no,
+                                None)
         acc: Optional[DistBindings] = None
-        ovfs = []
-        ti = 0
-        for i, step in enumerate(plan.steps):
-            # local shard: (1, cap, 2) and (1,) — drop the sharded leading axis
-            rows, nrows = flat_tables[ti][0], flat_tables[ti + 1][0]
-            ti += 2
-            s_bound, o_bound, same, take, cols = _step_meta(step)
-            data, n, ovf = device_scan(rows, nrows,
-                                       bounds[i, 0] if s_bound is not None else None,
-                                       bounds[i, 1] if o_bound is not None else None,
-                                       same, take, rows.shape[0])
-            copy = self.scan_copy[i]
-            part_var = None
-            tp = step.tp
-            if copy == "s" and is_var(tp.s):
-                part_var = tp.s
-            elif copy == "o" and is_var(tp.o):
-                part_var = tp.o
-            cur = DistBindings(cols, data, n, ovf, part_var)
+        for k, step in enumerate(seg.plan.steps):
+            i = seg.start + k
+            # local shard: (1, cap, k) and (1,) — drop the sharded axis
+            rows, nrows = flat_tables[2 * i][0], flat_tables[2 * i + 1][0]
+            cur = self._scan_step(i, step, rows, nrows, bounds)
             if acc is None:
                 acc = cur
-                ovfs.append(cur.overflow)
+                ovfs[i] = cur.overflow
                 continue
-            acc = self._dist_join(acc, cur, caps[i], axis)
-            ovfs.append(acc.overflow | cur.overflow)
+            joined = self._dist_join(acc, cur, caps[i], axis)
+            ovfs[i] = joined.overflow | cur.overflow
+            acc = joined
+        return DistBindings(acc.cols, acc.data, acc.n, no, acc.part_key)
+
+    def _eval_seg(self, seg: CoreSeg, caps, flat_tables, bounds, fconsts,
+                  values, ctr, ovfs, axis) -> DistBindings:
+        """Evaluate the core segment tree to one shard-local relation;
+        mirrors :meth:`repro.core.jexec.PlanExecutor._eval_seg` with the
+        combines going through the distributed (co-partition / gather)
+        join family.  Each combine writes its own overflow flag at its
+        capacity index, so returned relations carry clean flags."""
+        no = jnp.asarray(False)
+        if isinstance(seg, EmptySeg):
+            k = len(seg.vars)
+            return DistBindings(tuple(seg.vars),
+                                jnp.full((8, k), PAD, jnp.int32),
+                                jnp.asarray(0, jnp.int32), no, None)
+        if isinstance(seg, BGPSeg):
+            return self._compose_bgp(seg, caps, flat_tables, bounds, ovfs,
+                                     axis)
+        if isinstance(seg, FilterSeg):
+            d = self._eval_seg(seg.child, caps, flat_tables, bounds,
+                               fconsts, values, ctr, ovfs, axis)
+            jb = device_filter(JBindings(d.cols, d.data, d.n, no),
+                               seg.expr, values, fconsts, ctr)
+            return DistBindings(jb.cols, jb.data, jb.n, no, d.part_key)
+        left = self._eval_seg(seg.left, caps, flat_tables, bounds, fconsts,
+                              values, ctr, ovfs, axis)
+        right = self._eval_seg(seg.right, caps, flat_tables, bounds,
+                               fconsts, values, ctr, ovfs, axis)
+        ci = self._comb_index[id(seg)]
+        if seg.kind == "join":
+            out = self._dist_join(left, right, caps[ci], axis)
+        elif seg.kind == "left":
+            out = self._dist_left_join(left, right, caps[ci], axis,
+                                       seg.expr, values, fconsts, ctr)
+        else:
+            out = self._dist_union(left, right, caps[ci])
+        ovfs[ci] = out.overflow
+        return DistBindings(out.cols, out.data, out.n, no, out.part_key)
+
+    def _shard_program(self, caps, bounds, fconsts, values, *flat_tables):
+        """Returns (data, n, total, per_step_overflow[n_pipeline]).  Like
+        :meth:`repro.core.jexec.PlanExecutor._program`, overflow is
+        reported per capacity slot so the host retry doubles only the
+        overflowing capacities — one heavy constant must not inflate
+        every buffer for the whole (batched) workload."""
+        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+        ctr = [0]
+        ovfs: List[jax.Array] = [jnp.asarray(False)] * self._n_pipeline
+        acc = self._eval_seg(self.core.root, caps, flat_tables, bounds,
+                             fconsts, values, ctr, ovfs, axis)
         out_ovf = jax.lax.pmax(jnp.stack(ovfs), axis)
 
         # shard-local modifiers: FILTER masks (+ projection when no
         # global modifier needs the un-projected sort keys)
         no = jnp.asarray(False)
         jb = JBindings(acc.cols, acc.data, acc.n, no)
-        ctr = [0]
         for expr in self.spine.filters:
             jb = device_filter(jb, expr, values, fconsts, ctr)
         if not self.gathered:
@@ -299,7 +445,7 @@ class DistributedExecutor:
             total = jax.lax.psum(jb.n, axis)
             return jb.data, jb.n[None], total, out_ovf
         if self._mod_resize:
-            jb, mod_ovf = device_resize(jb, caps[len(plan.steps)])
+            jb, mod_ovf = device_resize(jb, caps[self._n_pipeline])
             out_ovf = jnp.concatenate(
                 [out_ovf, jax.lax.pmax(mod_ovf, axis)[None]])
 
@@ -308,7 +454,11 @@ class DistributedExecutor:
         # replicated (ordering before projection, as on the host paths) —
         # only the final n ≤ limit rows ever reach the host
         gdata = jax.lax.all_gather(jb.data, axis, axis=0, tiled=True)
-        keep = gdata[:, 0] != PAD
+        # positional validity (front-compacted shard blocks) — a 0-column
+        # relation has no PAD slot to test
+        keep = jax.lax.all_gather(
+            jnp.arange(jb.data.shape[0], dtype=jnp.int32) < jb.n,
+            axis, axis=0, tiled=True)
         cdata, cn, _ = _compact(gdata, keep, gdata.shape[0])
         gb = JBindings(jb.cols, cdata, cn, no)
         if self.spine.order:
@@ -352,6 +502,56 @@ class DistributedExecutor:
                          out_cap)
         return DistBindings(jb.cols, jb.data, jb.n, jb.overflow | ovf, key)
 
+    def _dist_left_join(self, a: DistBindings, b: DistBindings,
+                        out_cap: int, axis, expr, values, fconsts,
+                        ctr) -> DistBindings:
+        """OPTIONAL over shard-local relations.  With a shared variable
+        both sides are co-partitioned on it first, so each probe row
+        meets ALL its matches locally and the unmatched (UNBOUND-padded)
+        tail is computed shard-locally too; without one the (small) b
+        side is gathered everywhere — either way the per-shard row sets
+        partition the global left-outer-join result exactly."""
+        no = jnp.asarray(False)
+        shared = [c for c in a.cols if c in b.cols]
+        if not shared:
+            b_all, bn_all = _allgather_relation(b, axis)
+            jb = device_left_join(JBindings(a.cols, a.data, a.n, no),
+                                  JBindings(b.cols, b_all, bn_all, no),
+                                  out_cap, expr, values, fconsts, ctr)
+            return DistBindings(jb.cols, jb.data, jb.n, jb.overflow,
+                                a.part_key)
+        key = shared[0]
+        ovf = no
+        da, na = a.data, a.n
+        db, nb = b.data, b.n
+        if a.part_key != key:
+            da, na, o1 = repartition(da, na, a.cols.index(key),
+                                     self.n_shards, axis,
+                                     max(da.shape[0], out_cap))
+            ovf |= o1
+        if b.part_key != key:
+            db, nb, o2 = repartition(db, nb, b.cols.index(key),
+                                     self.n_shards, axis,
+                                     max(db.shape[0], out_cap))
+            ovf |= o2
+        jb = device_left_join(JBindings(a.cols, da, na, no),
+                              JBindings(b.cols, db, nb, no),
+                              out_cap, expr, values, fconsts, ctr)
+        return DistBindings(jb.cols, jb.data, jb.n, jb.overflow | ovf, key)
+
+    def _dist_union(self, a: DistBindings, b: DistBindings,
+                    out_cap: int) -> DistBindings:
+        """UNION is embarrassingly shard-local (no collective): each
+        shard concatenates its slices of both operands.  The partition
+        key survives only when both sides are partitioned by the SAME
+        variable (rows keep satisfying key % S == shard)."""
+        no = jnp.asarray(False)
+        jb = device_union(JBindings(a.cols, a.data, a.n, no),
+                          JBindings(b.cols, b.data, b.n, no), out_cap)
+        pk = a.part_key if (a.part_key is not None
+                            and a.part_key == b.part_key) else None
+        return DistBindings(jb.cols, jb.data, jb.n, jb.overflow, pk)
+
     # -- public API --------------------------------------------------------------
     bounds_from_plan = staticmethod(bounds_from_plan)
 
@@ -364,10 +564,9 @@ class DistributedExecutor:
 
     @functools.cached_property
     def _values(self) -> jax.Array:
-        vals = self.catalog.dictionary.values \
-            if self.catalog.dictionary is not None \
-            else np.empty(0, dtype=np.float64)
-        return jnp.asarray(vals.astype(np.float32))
+        # the (nv, 4) double-single numeric key table (replicated); see
+        # repro.core.jexec.numeric_value_keys
+        return jnp.asarray(self._value_keys)
 
     def _out_specs(self):
         if self.gathered:     # replicated post-gather results
@@ -443,7 +642,7 @@ class DistributedExecutor:
         vshape = jax.ShapeDtypeStruct(self._values.shape, jnp.float32)
         return self._jitted.lower(caps, bshape, fshape, vshape, *flat)
 
-    def run(self, max_retries: int = 8,
+    def run(self, max_retries: int = 16,
             bounds: Optional[np.ndarray] = None,
             fconsts: Optional[np.ndarray] = None
             ) -> Tuple[np.ndarray, Tuple[str, ...]]:
@@ -466,17 +665,19 @@ class DistributedExecutor:
                 if self.gathered:        # replicated, already finalized
                     return data[: int(ns[0])], self._final_cols()
                 rows = []
-                per = data.reshape(self.n_shards, -1, data.shape[-1])
+                per = data.reshape(self.n_shards,
+                                   data.shape[0] // self.n_shards,
+                                   data.shape[-1])
                 for i in range(self.n_shards):
                     rows.append(per[i][: int(ns[i])])
                 out = np.concatenate(rows, axis=0) if rows else np.empty((0, 0))
                 return out, self._final_cols()
-            caps = double_caps(caps, ovf, len(self.plan.steps))
+            caps = double_caps(caps, ovf, self._n_pipeline)
         raise RuntimeError("distributed join capacity overflow after retries")
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
                   fconsts_batch: Optional[Sequence[np.ndarray]] = None,
-                  max_retries: int = 8) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+                  max_retries: int = 16) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of the plan in one sharded launch;
         see :meth:`repro.core.jexec.PlanExecutor.run_batch` for the retry
         contract (any element overflowing retries the whole batch)."""
@@ -509,14 +710,16 @@ class DistributedExecutor:
                     if self.gathered:
                         out.append((data[bi][: int(ns[bi, 0])], cols))
                         continue
-                    per = data[bi].reshape(self.n_shards, -1, data.shape[-1])
+                    per = data[bi].reshape(self.n_shards,
+                                           data.shape[1] // self.n_shards,
+                                           data.shape[-1])
                     rows = [per[i][: int(ns[bi, i])]
                             for i in range(self.n_shards)]
                     merged = np.concatenate(rows, axis=0) if rows \
                         else np.empty((0, 0))
                     out.append((merged, cols))
                 return out
-            caps = double_caps(caps, ovf.any(axis=0), len(self.plan.steps))
+            caps = double_caps(caps, ovf.any(axis=0), self._n_pipeline)
         raise RuntimeError(
             "distributed join capacity overflow after retries (batched)")
 
@@ -578,9 +781,13 @@ def extvp_pair_masks_sharded(keys: jax.Array, build_operand: jax.Array,
 
 
 def _allgather_relation(b: DistBindings, axis):
+    """Gather a (front-compacted) shard-local relation to every shard.
+    Validity is positional — row i of a shard block is live iff
+    ``i < n`` — which also covers 0-column relations (fully-constant
+    patterns) that have no PAD slot to test."""
     data = jax.lax.all_gather(b.data, axis, axis=0, tiled=True)
+    keep = jax.lax.all_gather(
+        jnp.arange(b.data.shape[0], dtype=jnp.int32) < b.n,
+        axis, axis=0, tiled=True)
     n_tot = jax.lax.psum(b.n, axis)
-    # compact: valid rows are non-PAD in col 0
-    keep = data[:, 0] != PAD
-    order = jnp.argsort(~keep, stable=True)
-    return data[order], n_tot
+    return data[jnp.argsort(~keep, stable=True)], n_tot

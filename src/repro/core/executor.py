@@ -402,9 +402,10 @@ def stable_unique_rows(data: np.ndarray) -> np.ndarray:
 def order_rows(b: Bindings, keys: Sequence[Tuple[str, bool]],
                catalog: Catalog) -> Bindings:
     """ORDER BY over the dictionary's numeric value table: numeric
-    literals sort by value, everything else by term id; stable, so tied
-    rows keep their prior order.  Keys over variables the relation does
-    not bind are constant (≡ skipped)."""
+    literals sort by value, everything else by term id; UNBOUND sorts
+    last under ASC (SQL NULLS LAST, shared with the device engines);
+    stable, so tied rows keep their prior order.  Keys over variables
+    the relation does not bind are constant (≡ skipped)."""
     if not len(b) or not keys:
         return b
     values = catalog.dictionary.values if catalog.dictionary is not None \
@@ -420,6 +421,7 @@ def order_rows(b: Bindings, keys: Sequence[Tuple[str, bool]],
         else:
             v = np.full(len(b), np.nan)
         v = np.where(np.isnan(v), ids.astype(np.float64), v)
+        v = np.where(ids == UNBOUND, np.inf, v)
         ks.append(v if asc else -v)
     if not ks:
         return b

@@ -34,23 +34,155 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.algebra import BoolOp, Bound, Cmp, FilterExpr, NotExpr, is_var
-from repro.core.compiler import Plan, ScanStep
+from repro.core.compiler import (
+    BGPSeg, CombineSeg, CorePlan, CoreSeg, EmptySeg, FilterSeg, Plan,
+    ScanStep, core_filter_exprs, seg_vars,
+)
 from repro.core.modifiers import (
     ModifierSpine, filter_const_slots, filter_variables,
 )
 from repro.core.stats import Catalog
-from repro.core.table import round_up_pow2
+from repro.core.table import pad_rows, round_up_pow2
 from repro.rdf.dictionary import PAD, UNBOUND
 
-__all__ = ["JBindings", "PlanExecutor", "device_join", "device_scan",
+__all__ = ["JBindings", "PlanExecutor", "device_join", "device_left_join",
+           "device_union", "device_scan", "device_scan_tt",
            "device_scan_windowed", "build_key", "bounds_from_plan",
            "trace_count", "device_filter", "device_project",
-           "device_distinct", "device_order", "device_slice"]
+           "device_distinct", "device_order", "device_slice",
+           "numeric_value_keys", "prepare_value_keys"]
 
 A_SENT = np.int32(2**31 - 1)   # probe-side padded-row key (== PAD)
 B_SENT = np.int32(2**31 - 2)   # build-side padded-row key (sort-max, != A_SENT)
 A_NULL = np.int32(-3)          # probe-side UNBOUND key
 B_NULL = np.int32(-5)          # build-side UNBOUND key
+
+
+# ---------------------------------------------------------------------------
+# Double-single numeric keys
+#
+# The device engines run with x64 disabled, so float64 dictionary values
+# cannot be compared/sorted on device directly.  Each float64 ``v`` is
+# split into a float32 pair ``(hi, lo)`` with ``hi = f32(v)`` (nearest)
+# and ``lo = f32(v - f64(hi))``: ``hi`` is monotone in ``v`` and, for
+# equal ``hi``, the residual is monotone too, so LEXICOGRAPHIC pair
+# comparison is order-equivalent to the float64 comparison whenever the
+# pair mapping is injective over the values actually compared.  That
+# injectivity is checked ONCE on the host (adjacent-unique over the
+# sorted value+id key set) — tables that defeat it (sub-2^-29-relative
+# deltas) raise NotImplementedError, which the backends turn into the
+# counted eager fallback.  This replaces the old blanket "values must be
+# float32-exact" bail-out: any id-space size and ordinary float64 value
+# tables (2^24+, fractional, negative) now stay on device.
+# ---------------------------------------------------------------------------
+
+def _split_f64(v: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    hi = v.astype(np.float32)
+    with np.errstate(invalid="ignore"):
+        lo = (v - hi.astype(np.float64)).astype(np.float32)
+    return hi, np.where(np.isnan(lo), np.float32(0.0), lo)
+
+
+def _split_scalar(v: float) -> Tuple[np.float32, np.float32]:
+    hi = np.float32(v)
+    return hi, np.float32(np.float64(v) - np.float64(hi))
+
+
+def _check_pair_injective(vals: np.ndarray, what: str) -> None:
+    """Distinct float64 keys must map to distinct (hi, lo) pairs."""
+    u = np.unique(vals[~np.isnan(vals)])
+    if len(u) <= 1:
+        return
+    hi, lo = _split_f64(u)
+    if not np.all((np.diff(hi) != 0) | (np.diff(lo) != 0)):
+        raise NotImplementedError(
+            f"{what} is not double-single distinguishable; numeric "
+            "modifiers would diverge from the host engines")
+
+
+def numeric_value_keys(dictionary) -> np.ndarray:
+    """The device numeric-key table: float32 ``(nv, 4)`` of
+    ``[cmp_hi, cmp_lo, ord_hi, ord_lo]`` per term id.  The cmp pair is
+    NaN for non-numeric terms (comparisons drop those rows, matching the
+    host engines); the ord pair falls back to the term id (the host
+    ``order_rows`` key).  Cached on the dictionary; raises
+    NotImplementedError when the pair encoding cannot distinguish the
+    table's keys (the backends' fallback signal)."""
+    if dictionary is None:
+        return np.empty((0, 4), dtype=np.float32)
+    cached = getattr(dictionary, "_ds_value_keys", None)
+    if cached is not None and cached.shape[0] == len(dictionary):
+        return cached
+    vals = np.asarray(dictionary.values, dtype=np.float64)
+    n = len(vals)
+    cmp_hi, cmp_lo = _split_f64(vals)
+    cmp_hi = np.where(np.isnan(vals), np.float32(np.nan), cmp_hi)
+    ord64 = np.where(np.isnan(vals), np.arange(n, dtype=np.float64), vals)
+    _check_pair_injective(ord64, "dictionary value/id key table")
+    ord_hi, ord_lo = _split_f64(ord64)
+    keys = np.stack([cmp_hi, cmp_lo, ord_hi, ord_lo], axis=1) \
+        .astype(np.float32)
+    try:
+        dictionary._ds_value_keys = keys
+    except AttributeError:
+        pass
+    return keys
+
+
+def _float_literals(exprs: Sequence[FilterExpr]) -> List[float]:
+    out: List[float] = []
+
+    def walk(e) -> None:
+        if isinstance(e, Cmp):
+            for t in (e.lhs, e.rhs):
+                if isinstance(t, float):
+                    out.append(t)
+        elif isinstance(e, BoolOp):
+            for a in e.args:
+                walk(a)
+        elif isinstance(e, NotExpr):
+            walk(e.arg)
+
+    for e in exprs:
+        walk(e)
+    return out
+
+
+def _exprs_use_values(exprs: Sequence[FilterExpr]) -> bool:
+    """True when any filter comparison is numeric (order ops or a float
+    literal operand) — i.e. reads the numeric key table."""
+
+    def walk(e) -> bool:
+        if isinstance(e, Cmp):
+            return e.op in ("<", "<=", ">", ">=") or \
+                isinstance(e.lhs, float) or isinstance(e.rhs, float)
+        if isinstance(e, BoolOp):
+            return any(walk(a) for a in e.args)
+        if isinstance(e, NotExpr):
+            return walk(e.arg)
+        return False
+
+    return any(walk(e) for e in exprs)
+
+
+def prepare_value_keys(catalog: Optional[Catalog], spine: ModifierSpine,
+                       filters: Sequence[FilterExpr]) -> np.ndarray:
+    """The numeric key table a program needs — empty when nothing in the
+    program reads values (identity-only filters, no ORDER BY), so
+    value-free templates never pay the injectivity check and never fall
+    back on a pathological dictionary."""
+    uses = bool(spine.order) or _exprs_use_values(filters)
+    if not uses or catalog is None or catalog.dictionary is None:
+        return np.empty((0, 4), dtype=np.float32)
+    keys = numeric_value_keys(catalog.dictionary)
+    lits = _float_literals(list(filters))
+    if lits:
+        vals = np.asarray(catalog.dictionary.values, dtype=np.float64)
+        _check_pair_injective(
+            np.concatenate([vals[~np.isnan(vals)],
+                            np.asarray(lits, dtype=np.float64)]),
+            "filter literal vs dictionary value keys")
+    return keys
 
 
 @dataclass
@@ -146,15 +278,17 @@ def device_scan_windowed(rows: jax.Array, n: jax.Array, s_bound,
     return data, jnp.minimum(hi - lo, out_cap), hi - lo > out_cap
 
 
-def device_join(a: JBindings, b: JBindings, out_cap: int,
-                b_presorted: Optional[Tuple[jax.Array, jax.Array]] = None
-                ) -> JBindings:
-    """Natural join of two static relations (sort-merge, rank expansion).
+def _join_expand(a: JBindings, b: JBindings, out_cap: int,
+                 b_presorted: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Shared expansion machinery of the join family: pair every probe
+    row with its build-side matches into ``out_cap`` output slots.
 
-    ``b_presorted`` is an optional ``(order_b, kb_sorted)`` pair from
-    :func:`build_key` + sort, letting callers hoist the O(n log n)
-    build-side sort out of a vmapped batch when ``b`` does not depend on
-    the bound constants."""
+    Returns ``(out_cols, data, a_idx, valid, total, needs_compact)``:
+    ``a_idx[j]`` is the probe row that produced slot ``j`` (the hook the
+    left-outer join uses to compute its matched set), ``valid`` the
+    kept-slot mask, ``total`` the true (uncapped) match count.  When
+    ``needs_compact`` is False the valid slots are already contiguous at
+    the front (``valid == j < total``)."""
     shared = [c for c in a.cols if c in b.cols]
     b_only = [c for c in b.cols if c not in a.cols]
     out_cols = a.cols + tuple(b_only)
@@ -162,16 +296,13 @@ def device_join(a: JBindings, b: JBindings, out_cap: int,
     cap_a, cap_b = a.capacity, b.capacity
     if not shared:  # cross join (rare; bounded by caps)
         ii = jnp.arange(out_cap, dtype=jnp.int32)
-        a_idx = ii // jnp.maximum(b.n, 1)
+        a_idx = jnp.clip(ii // jnp.maximum(b.n, 1), 0, cap_a - 1)
         b_idx = ii % jnp.maximum(b.n, 1)
         total = a.n * b.n
         valid = ii < total
         data = jnp.concatenate(
-            [a.data[jnp.clip(a_idx, 0, cap_a - 1)],
-             b.data[jnp.clip(b_idx, 0, cap_b - 1)]], axis=1)
-        data = jnp.where(valid[:, None], data, PAD)
-        return JBindings(out_cols, data, jnp.minimum(total, out_cap).astype(jnp.int32),
-                         a.overflow | b.overflow | (total > out_cap))
+            [a.data[a_idx], b.data[jnp.clip(b_idx, 0, cap_b - 1)]], axis=1)
+        return out_cols, data, a_idx, valid, total, False
 
     ka = a.data[:, a.cols.index(shared[0])]
     ka = jnp.where(ka == UNBOUND, A_NULL, ka)
@@ -210,17 +341,116 @@ def device_join(a: JBindings, b: JBindings, out_cap: int,
     if b_only:
         pieces.append(right[:, [b.cols.index(c) for c in b_only]])
     data = jnp.concatenate(pieces, axis=1)
-    if shared[1:]:
+    return out_cols, data, a_idx, valid, total, bool(shared[1:])
+
+
+def device_join(a: JBindings, b: JBindings, out_cap: int,
+                b_presorted: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> JBindings:
+    """Natural join of two static relations (sort-merge, rank expansion).
+
+    ``b_presorted`` is an optional ``(order_b, kb_sorted)`` pair from
+    :func:`build_key` + sort, letting callers hoist the O(n log n)
+    build-side sort out of a vmapped batch when ``b`` does not depend on
+    the bound constants."""
+    out_cols, data, _, valid, total, needs_compact = _join_expand(
+        a, b, out_cap, b_presorted)
+    if needs_compact:
         data, n, ovf = _compact(data, valid, out_cap)
     else:
-        # single shared variable (the overwhelmingly common star/chain
-        # case): rank expansion emits matches contiguously at j < total,
-        # so masking replaces the O(out_cap log out_cap) compact sort
+        # matches are contiguous at j < total (cross join, or the
+        # overwhelmingly common single-shared-variable star/chain case):
+        # masking replaces the O(out_cap log out_cap) compact sort
         data = jnp.where(valid[:, None], data, PAD)
         n = jnp.minimum(total, out_cap).astype(jnp.int32)
         ovf = jnp.asarray(False)
     return JBindings(out_cols, data, n,
                      a.overflow | b.overflow | ovf | (total > out_cap))
+
+
+def device_left_join(a: JBindings, b: JBindings, out_cap: int,
+                     expr: Optional[FilterExpr] = None,
+                     values: Optional[jax.Array] = None,
+                     fconsts: Optional[jax.Array] = None,
+                     ctr: Optional[List[int]] = None) -> JBindings:
+    """OPTIONAL: left-outer join.  Inner rows first (probe-major, build
+    rows in original order — the natural-join order), then each
+    unmatched probe row once, UNBOUND-padded on the build-only columns,
+    in probe order — exactly the eager ``left_outer_join`` sequence, so
+    row-for-row parity with the host engines holds without a sort.
+
+    ``expr`` is OPTIONAL's join condition: it filters the INNER rows
+    only (a probe row whose matches all fail the condition comes out
+    unmatched), with constants riding the shared runtime ``fconsts``
+    vector like every other filter."""
+    out_cols, data, a_idx, valid, total, _ = _join_expand(a, b, out_cap)
+    cap_a = a.capacity
+    if expr is not None:
+        inner = JBindings(out_cols, data,
+                          jnp.asarray(out_cap, jnp.int32), jnp.asarray(False))
+        valid = valid & _filter_mask(expr, inner, values, fconsts, ctr)
+
+    # matched set: scatter hit flags through a_idx (invalid slots are
+    # routed to a dump slot so clipped indices cannot pollute the flags)
+    hit = jnp.zeros((cap_a + 1,), bool) \
+        .at[jnp.where(valid, a_idx, cap_a)].set(True)[:cap_a]
+    unmatched = _valid_mask(cap_a, a.n) & ~hit
+
+    k_b = len(out_cols) - len(a.cols)
+    tail = a.data if not k_b else jnp.concatenate(
+        [a.data, jnp.full((cap_a, k_b), UNBOUND, jnp.int32)], axis=1)
+    buf = jnp.concatenate([data, tail], axis=0)
+    keep = jnp.concatenate([valid, unmatched])
+    out, n, ovf = _compact(buf, keep, out_cap)
+    # total > out_cap also voids the matched-set computation (cut slots
+    # never set their hit flag), so the overflow retry covers it
+    return JBindings(out_cols, out, n,
+                     a.overflow | b.overflow | ovf | (total > out_cap))
+
+
+def device_union(a: JBindings, b: JBindings, out_cap: int) -> JBindings:
+    """UNION: both operands lifted to the column union (UNBOUND fill),
+    left rows first then right rows — the eager ``union`` sequence —
+    via one stable compact over the concatenated buffers."""
+    cols = a.cols + tuple(c for c in b.cols if c not in a.cols)
+
+    def lift(x: JBindings) -> jax.Array:
+        cap = x.capacity
+        if not cols:
+            return x.data[:, :0]
+        arrs = [x.data[:, x.cols.index(c)] if c in x.cols
+                else jnp.full((cap,), UNBOUND, jnp.int32) for c in cols]
+        d = jnp.stack(arrs, axis=1)
+        return jnp.where(_valid_mask(cap, x.n)[:, None], d, PAD)
+
+    buf = jnp.concatenate([lift(a), lift(b)], axis=0)
+    keep = jnp.concatenate([_valid_mask(a.capacity, a.n),
+                            _valid_mask(b.capacity, b.n)])
+    data, n, ovf = _compact(buf, keep, out_cap)
+    return JBindings(cols, data, n, a.overflow | b.overflow | ovf)
+
+
+def device_scan_tt(rows: jax.Array, n: jax.Array, s_bound, p_bound, o_bound,
+                   eqs: Sequence[Tuple[int, int]], take: Sequence[int],
+                   out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Select + project over the (N, 3) triples table — the unbound-
+    predicate scan (and the ``layout="tt"`` baseline scan).  Bound s/o
+    constants are runtime scalars like :func:`device_scan`'s; the bound
+    predicate of a TT-layout scan is trace-time static (predicates are
+    plan identity and never template-rebindable).  ``eqs`` carries the
+    repeated-variable equality selections of patterns like ``?x ?p ?x``."""
+    cap = rows.shape[0]
+    keep = _valid_mask(cap, n)
+    if s_bound is not None:
+        keep &= rows[:, 0] == s_bound
+    if p_bound is not None:
+        keep &= rows[:, 1] == p_bound
+    if o_bound is not None:
+        keep &= rows[:, 2] == o_bound
+    for i, j in eqs:
+        keep &= rows[:, i] == rows[:, j]
+    projected = rows[:, list(take)] if take else rows[:, :0]
+    return _compact(projected, keep, out_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -234,25 +464,35 @@ def device_join(a: JBindings, b: JBindings, out_cap: int,
 
 def _filter_operand(b: JBindings, values: jax.Array, term, numeric: bool,
                     fconsts: jax.Array, ctr: List[int]):
-    """(ids, numeric values) for one comparison operand.  Constant ids
-    are *runtime* scalars read from ``fconsts`` (slot order fixed by
-    :func:`repro.core.modifiers.filter_const_slots`), so re-binding a
-    template constant never re-traces; float literals are trace-time
-    constants (they are part of the template text)."""
+    """(ids, numeric (hi, lo) key pair) for one comparison operand.
+    Constant ids are *runtime* scalars read from ``fconsts`` (slot order
+    fixed by :func:`repro.core.modifiers.filter_const_slots`), so
+    re-binding a template constant never re-traces; float literals are
+    trace-time constants (they are part of the template text).  A
+    variable the relation does not bind is UNBOUND everywhere — the
+    eager ``_operand`` semantics, which OPTIONAL/UNION columns rely on."""
     cap = b.capacity
     nv = values.shape[0]
+    dt = values.dtype
     if isinstance(term, str):            # variable
-        ids = b.data[:, b.cols.index(term)]
+        if term in b.cols:
+            ids = b.data[:, b.cols.index(term)]
+        else:
+            ids = jnp.full((cap,), UNBOUND, jnp.int32)
         if not numeric:
             return ids, None
         if nv:
             safe = jnp.clip(ids, 0, nv - 1)
-            val = jnp.where(ids >= 0, values[safe], jnp.nan)
+            ok = ids >= 0
+            hi = jnp.where(ok, values[safe, 0], jnp.nan)
+            lo = jnp.where(ok, values[safe, 1], jnp.nan)
         else:
-            val = jnp.full((cap,), jnp.nan, values.dtype)
-        return ids, val
-    if isinstance(term, float):          # numeric literal
-        return None, jnp.full((cap,), term, values.dtype)
+            hi = jnp.full((cap,), jnp.nan, dt)
+            lo = hi
+        return ids, (hi, lo)
+    if isinstance(term, float):          # numeric literal (trace-time)
+        fhi, flo = _split_scalar(term)
+        return None, (jnp.full((cap,), fhi, dt), jnp.full((cap,), flo, dt))
     tid = fconsts[ctr[0]]                # constant id -> runtime slot
     ctr[0] += 1
     ids = jnp.full((cap,), tid, jnp.int32)
@@ -260,18 +500,22 @@ def _filter_operand(b: JBindings, values: jax.Array, term, numeric: bool,
         return ids, None
     if nv:
         ok = (tid >= 0) & (tid < nv)
-        v = jnp.where(ok, values[jnp.clip(tid, 0, nv - 1)], jnp.nan)
+        safe = jnp.clip(tid, 0, nv - 1)
+        hi = jnp.where(ok, values[safe, 0], jnp.nan)
+        lo = jnp.where(ok, values[safe, 1], jnp.nan)
     else:
-        v = jnp.asarray(jnp.nan, values.dtype)
-    return ids, jnp.full((cap,), v, values.dtype)
+        hi = jnp.asarray(jnp.nan, dt)
+        lo = hi
+    return ids, (jnp.full((cap,), hi, dt), jnp.full((cap,), lo, dt))
 
 
 def _filter_mask(expr: FilterExpr, b: JBindings, values: jax.Array,
                  fconsts: jax.Array, ctr: List[int]) -> jax.Array:
     """Boolean keep-mask over the relation's rows; mirrors the eager
     :func:`repro.core.executor.eval_filter` semantics exactly (identity
-    comparison on ids, numeric comparison through the dictionary value
-    table, UNBOUND/type-error rows dropped)."""
+    comparison on ids, numeric comparison through the dictionary's
+    double-single key pairs, UNBOUND/type-error rows dropped).  NaN key
+    pairs make every comparison false, matching host NaN semantics."""
     if isinstance(expr, BoolOp):
         masks = [_filter_mask(e, b, values, fconsts, ctr) for e in expr.args]
         out = masks[0]
@@ -281,24 +525,30 @@ def _filter_mask(expr: FilterExpr, b: JBindings, values: jax.Array,
     if isinstance(expr, NotExpr):
         return ~_filter_mask(expr.arg, b, values, fconsts, ctr)
     if isinstance(expr, Bound):
+        if expr.var not in b.cols:
+            return jnp.zeros((b.capacity,), bool)
         return b.data[:, b.cols.index(expr.var)] != UNBOUND
     assert isinstance(expr, Cmp)
     numeric = expr.op in ("<", "<=", ">", ">=") or \
         isinstance(expr.lhs, float) or isinstance(expr.rhs, float)
-    lid, lval = _filter_operand(b, values, expr.lhs, numeric, fconsts, ctr)
-    rid, rval = _filter_operand(b, values, expr.rhs, numeric, fconsts, ctr)
+    lid, lpair = _filter_operand(b, values, expr.lhs, numeric, fconsts, ctr)
+    rid, rpair = _filter_operand(b, values, expr.rhs, numeric, fconsts, ctr)
     if numeric:
+        lhi, llo = lpair
+        rhi, rlo = rpair
+        eq = (lhi == rhi) & (llo == rlo)
+        lt = (lhi < rhi) | ((lhi == rhi) & (llo < rlo))
         if expr.op == "=":
-            return lval == rval
+            return eq
         if expr.op == "!=":
-            return (lval != rval) & ~jnp.isnan(lval) & ~jnp.isnan(rval)
+            return ~eq & ~jnp.isnan(lhi) & ~jnp.isnan(rhi)
         if expr.op == "<":
-            return lval < rval
+            return lt
         if expr.op == "<=":
-            return lval <= rval
+            return lt | eq
         if expr.op == ">":
-            return lval > rval
-        return lval >= rval
+            return ~(lt | eq) & ~jnp.isnan(lhi) & ~jnp.isnan(rhi)
+        return ~lt & ~jnp.isnan(lhi) & ~jnp.isnan(rhi)
     ok = (lid != UNBOUND) & (rid != UNBOUND)
     return ((lid == rid) if expr.op == "=" else (lid != rid)) & ok
 
@@ -371,12 +621,15 @@ def device_distinct(b: JBindings) -> JBindings:
 
 def device_order(b: JBindings, keys: Sequence[Tuple[str, bool]],
                  values: jax.Array) -> JBindings:
-    """ORDER BY: stable lexsort over the dictionary's numeric value
-    table (numeric literals by value, other terms by id — the eager
-    ``order_rows`` semantics); PAD rows keep sorting last."""
+    """ORDER BY: stable lexsort over the dictionary's double-single
+    ``(ord_hi, ord_lo)`` key pairs (numeric literals by value, other
+    terms by id — the eager ``order_rows`` semantics); UNBOUND sorts
+    last (SQL NULLS LAST, shared by all engines); PAD rows keep sorting
+    behind every valid row."""
     cap = b.capacity
     valid = _valid_mask(cap, b.n)
     nv = values.shape[0]
+    dt = values.dtype
     ks = []
     for var, asc in reversed(tuple(keys)):
         if var not in b.cols:
@@ -384,11 +637,17 @@ def device_order(b: JBindings, keys: Sequence[Tuple[str, bool]],
         ids = b.data[:, b.cols.index(var)]
         if nv:
             safe = jnp.clip(ids, 0, nv - 1)
-            v = jnp.where(ids >= 0, values[safe], jnp.nan)
+            ok = ids >= 0
+            hi = jnp.where(ok, values[safe, 2], ids.astype(dt))
+            lo = jnp.where(ok, values[safe, 3], jnp.zeros((cap,), dt))
         else:
-            v = jnp.full((cap,), jnp.nan, values.dtype)
-        v = jnp.where(jnp.isnan(v), ids.astype(values.dtype), v)
-        ks.append(v if asc else -v)
+            hi = ids.astype(dt)
+            lo = jnp.zeros((cap,), dt)
+        hi = jnp.where(ids == UNBOUND, jnp.asarray(jnp.inf, dt), hi)
+        if not asc:
+            hi, lo = -hi, -lo
+        ks.append(lo)                     # minor half of the pair first
+        ks.append(hi)                     # lexsort: later keys dominate
     if not ks:
         return b
     ks.append((~valid).astype(jnp.int32))          # valid rows first
@@ -435,6 +694,38 @@ def _step_meta(step: ScanStep) -> Tuple[Optional[int], Optional[int], bool,
     return s_bound, o_bound, same, tuple(take), tuple(cols)
 
 
+def _tt_meta(tp) -> Tuple[Optional[int], Optional[int], Optional[int],
+                          Tuple[Tuple[int, int], ...], Tuple[int, ...],
+                          Tuple[str, ...]]:
+    """Static scan metadata of a triples-table step: per-position bound
+    constants (presence is static; s/o VALUES ride the runtime bounds
+    array, the predicate is trace-time static), repeated-variable
+    equality selections, and the projected (s, p, o)-first-seen columns
+    — the eager ``_scan_tt`` layout."""
+    terms = (tp.s, tp.p, tp.o)
+    s_b, p_b, o_b = (None if is_var(t) else int(t) for t in terms)
+    cols: List[str] = []
+    take: List[int] = []
+    eqs: List[Tuple[int, int]] = []
+    first: Dict[str, int] = {}
+    for i, t in enumerate(terms):
+        if not is_var(t):
+            continue
+        if t in first:
+            eqs.append((first[t], i))
+        else:
+            first[t] = i
+            cols.append(t)
+            take.append(i)
+    return s_b, p_b, o_b, tuple(eqs), tuple(take), tuple(cols)
+
+
+def _step_cols(step: ScanStep) -> Tuple[str, ...]:
+    if step.uses_tt:
+        return _tt_meta(step.tp)[5]
+    return _step_meta(step)[4]
+
+
 _TRACE_COUNT = 0   # program traces (== XLA compiles); test probe
 
 
@@ -461,10 +752,24 @@ def _pipeline_cols(plan: Plan) -> Tuple[str, ...]:
     """Variables the scan/join pipeline produces, first-seen order."""
     cols: List[str] = []
     for step in plan.steps:
-        for v in _step_meta(step)[4]:
+        for v in _step_cols(step):
             if v not in cols:
                 cols.append(v)
     return tuple(cols)
+
+
+def _exec_cols(seg: CoreSeg) -> Tuple[str, ...]:
+    """Columns the device evaluation of a segment produces, in pipeline
+    order (scan order within a BGP; left-then-right-only for combines —
+    the same construction the eager tree evaluation uses)."""
+    if isinstance(seg, EmptySeg):
+        return tuple(seg.vars)
+    if isinstance(seg, BGPSeg):
+        return _pipeline_cols(seg.plan)
+    if isinstance(seg, FilterSeg):
+        return _exec_cols(seg.child)
+    left = _exec_cols(seg.left)
+    return left + tuple(c for c in _exec_cols(seg.right) if c not in left)
 
 
 def _mod_cap_seed(spine: ModifierSpine, pipeline_cap: int) -> int:
@@ -497,64 +802,42 @@ def double_caps(caps: Tuple[int, ...], ovf, n_steps: int) -> Tuple[int, ...]:
 
 
 def _spine_uses_values(spine: ModifierSpine) -> bool:
-    """True when the compiled spine reads the numeric value table:
+    """True when the compiled spine reads the numeric key table:
     ORDER BY keys, or any filter comparison that is numeric (order ops,
     or a float literal operand).  Identity-only filters don't."""
-    if spine.order:
-        return True
-
-    def walk(e) -> bool:
-        if isinstance(e, Cmp):
-            return e.op in ("<", "<=", ">", ">=") or \
-                isinstance(e.lhs, float) or isinstance(e.rhs, float)
-        if isinstance(e, BoolOp):
-            return any(walk(a) for a in e.args)
-        if isinstance(e, NotExpr):
-            return walk(e.arg)
-        return False
-
-    return any(walk(e) for e in spine.filters)
+    return bool(spine.order) or _exprs_use_values(spine.filters)
 
 
 def check_spine(spine: ModifierSpine, pipe_cols: Tuple[str, ...],
                 catalog: Optional[Catalog] = None) -> Tuple[str, ...]:
-    """Validate that a modifier spine is compilable over a pipeline that
-    binds ``pipe_cols``; raises NotImplementedError (the backends'
-    fall-back-to-eager signal) otherwise.  Returns the output columns.
+    """Output columns of a spine over a pipeline binding ``pipe_cols``.
 
-    The device engines run with x64 disabled, so the dictionary's
-    float64 value table is gathered as float32 on device.  When the
-    spine actually reads values (numeric FILTER, ORDER BY) and the table
-    is not exactly float32-representable — values above 2^24, sub-float32
-    deltas, or an id space that large (ids are the sort fallback key) —
-    the host engines would disagree with the device, so those templates
-    stay on the (counted) eager path instead of silently diverging."""
-    for v in filter_variables(spine.filters):
-        if v not in pipe_cols:
-            raise NotImplementedError(
-                f"filter variable {v} is not bound by the BGP pipeline")
-    if catalog is not None and catalog.dictionary is not None and \
-            _spine_uses_values(spine):
-        if len(catalog.dictionary) >= 2 ** 24:
-            raise NotImplementedError(
-                "id space exceeds float32-exact range for device sorts")
-        vals = catalog.dictionary.values
-        finite = vals[~np.isnan(vals)]
-        if len(finite) and not np.array_equal(
-                finite.astype(np.float32).astype(np.float64), finite):
-            raise NotImplementedError(
-                "dictionary value table is not float32-exact; numeric "
-                "modifiers would diverge from the host engines")
+    Historically this also rejected filter variables outside the
+    pipeline and non-float32-exact value tables; both limits are gone —
+    missing filter variables are UNBOUND everywhere (the eager
+    semantics) and numeric keys use exact double-single float32 pairs
+    (validated by :func:`prepare_value_keys`, which still raises the
+    backends' NotImplementedError fallback signal for tables whose keys
+    the pair encoding cannot distinguish)."""
     return tuple(spine.project) if spine.project is not None else pipe_cols
 
 
 class PlanExecutor:
-    """Builds and runs the jitted static program for a compiled Plan.
+    """Builds and runs the jitted static program for a compiled core.
 
-    ``caps[i]`` bounds the output of step i (step 0 = first scan; step i>0 =
-    i-th join output); scan caps are table capacities.  ``run`` retries
+    Accepts either a flat :class:`Plan` (a single BGP — the historical
+    construction, still used directly by tests and benchmarks) or a
+    :class:`CorePlan` segment tree covering FILTER/OPTIONAL/UNION cores
+    and unbound-predicate (TT) scans.
+
+    ``caps[i]`` for ``i < len(plan.steps)`` bounds the output of flat
+    step i within its BGP segment (a segment's first step compacts to
+    its cap; joins within the segment write at the following caps);
+    combine segments (join/left/union) get their own capacity slots
+    behind the flat steps, in evaluation (post-) order.  ``run`` retries
     with doubled caps on overflow (host loop, geometric — at most
-    ~log2(result/estimate) recompiles, amortized across a served workload).
+    ~log2(result/estimate) recompiles, amortized across a served
+    workload).
 
     Bound s/o constants enter the program as runtime int32 scalars (their
     *presence* is static, their values are not), so every instantiation of
@@ -563,23 +846,37 @@ class PlanExecutor:
 
     ``spine`` appends the query's solution modifiers to the traced
     program (FILTER masks, on-device projection, sort-based DISTINCT,
-    value-table ORDER BY, static OFFSET/LIMIT window); filter constants
-    ride the runtime ``fconsts`` input the same way scan bounds do, so
+    value-table ORDER BY, static OFFSET/LIMIT window); filter constants —
+    the spine's AND the core's (OPTIONAL conditions, FILTER segments) —
+    share one runtime ``fconsts`` input consumed in evaluation order, so
     modifier-bearing templates re-bind without re-tracing too.
     """
 
     bounds_from_plan = staticmethod(bounds_from_plan)
 
-    def __init__(self, plan: Plan, catalog: Catalog, slack: float = 1.5,
+    def __init__(self, plan, catalog: Catalog, slack: float = 1.5,
                  spine: Optional[ModifierSpine] = None):
-        if plan.empty:
+        if isinstance(plan, CorePlan):
+            core = plan
+        else:
+            core = CorePlan(root=BGPSeg(plan=plan, start=0), flat=plan,
+                            empty=plan.empty, vars=plan.vars)
+        if core.empty:
             raise ValueError("cannot build executor for statistics-empty plan")
-        self.plan = plan
+        self.core = core
+        self.plan = core.flat      # what template re-binding operates on
         self.catalog = catalog
         self.spine = spine if spine is not None else ModifierSpine()
-        self._pipe_cols = _pipeline_cols(plan)
+        self._pipe_cols = _exec_cols(core.root)
         self._out_vars = check_spine(self.spine, self._pipe_cols, catalog)
-        self.filter_slots = filter_const_slots(self.spine.filters)
+        self._core_filters = core_filter_exprs(core.root)
+        self._all_filters = tuple(self._core_filters) + \
+            tuple(self.spine.filters)
+        self.filter_slots = filter_const_slots(self._all_filters)
+        # raises NotImplementedError (→ counted eager fallback) only for
+        # dictionaries whose numeric keys defeat the double-single pairs
+        self._value_keys = prepare_value_keys(catalog, self.spine,
+                                              self._all_filters)
         # DISTINCT/ORDER BY sort the whole static buffer; the join caps
         # are sized for the worst unfiltered join, which would make every
         # modifier query pay an O(cap log cap) sort over mostly-PAD rows.
@@ -588,22 +885,53 @@ class PlanExecutor:
         # so the retry protocol grows it geometrically when a template's
         # true result is larger — and the grown cap persists).
         self._mod_resize = bool(self.spine.distinct or self.spine.order)
-        self.tables = []
-        self.caps: List[int] = []
-        est = 0.0
-        for i, step in enumerate(plan.steps):
-            if step.uses_tt:
-                raise NotImplementedError("device path requires bound predicates")
-            t = catalog.table(step.kind, int(step.tp.p), step.p2)
-            self.tables.append(t)
-            scan_est = max(1.0, float(len(t)))
-            if step.tp.n_bound() > 1:
-                scan_est = max(1.0, scan_est * 0.01)
-            est = scan_est if i == 0 else max(est, scan_est, est * 1.25)
-            self.caps.append(round_up_pow2(int(est * slack) + 8, 16))
+        self.tables = [
+            None if step.uses_tt
+            else catalog.table(step.kind, int(step.tp.p), step.p2)
+            for step in self.plan.steps]
+        self._has_tt = any(s.uses_tt for s in self.plan.steps)
+        n_flat = len(self.plan.steps)
+        flat_caps = [16] * n_flat
+        comb_caps: List[int] = []
+        self._comb_index: Dict[int, int] = {}
+
+        def seed(seg: CoreSeg) -> float:
+            if isinstance(seg, EmptySeg):
+                return 1.0
+            if isinstance(seg, FilterSeg):
+                return seed(seg.child)
+            if isinstance(seg, BGPSeg):
+                est = 1.0
+                for k, step in enumerate(seg.plan.steps):
+                    i = seg.start + k
+                    size = catalog.n_triples if step.uses_tt \
+                        else len(self.tables[i])
+                    scan_est = max(1.0, float(size))
+                    if step.tp.n_bound() > 1:
+                        scan_est = max(1.0, scan_est * 0.01)
+                    est = scan_est if k == 0 else \
+                        max(est, scan_est, est * 1.25)
+                    flat_caps[i] = round_up_pow2(int(est * slack) + 8, 16)
+                return est
+            le, re_ = seed(seg.left), seed(seg.right)
+            if seg.kind == "join":
+                est = 1.25 * max(le, re_)
+            elif seg.kind == "left":
+                # inner rows plus (worst case) every left row unmatched
+                est = 1.25 * max(le, re_) + le
+            else:
+                est = le + re_
+            self._comb_index[id(seg)] = n_flat + len(comb_caps)
+            comb_caps.append(round_up_pow2(int(est * slack) + 8, 16))
+            return est
+
+        seed(core.root)
+        self.caps = flat_caps + comb_caps
+        self._n_pipeline = len(self.caps)
         if self._mod_resize:
-            self.caps.append(_mod_cap_seed(self.spine, self.caps[-1]))
-        self._default_bounds = bounds_from_plan(plan)
+            pipe_cap = max(self.caps) if self.caps else 64
+            self.caps.append(_mod_cap_seed(self.spine, pipe_cap))
+        self._default_bounds = bounds_from_plan(self.plan)
 
     def fconsts_from_mapping(self, mapping=None) -> np.ndarray:
         """Runtime filter-constant vector for one binding: template
@@ -614,21 +942,22 @@ class PlanExecutor:
                           dtype=np.int32)
 
     def _apply_spine(self, b: JBindings, values: jax.Array,
-                     fconsts: jax.Array, caps: Tuple[int, ...]
-                     ) -> Tuple[JBindings, Optional[jax.Array]]:
+                     fconsts: jax.Array, caps: Tuple[int, ...],
+                     ctr: List[int]) -> Tuple[JBindings, Optional[jax.Array]]:
         """FILTER* → [resize] → ORDER BY → project → DISTINCT →
         OFFSET/LIMIT, the canonical host sequence lowered onto the
         static relation (ordering precedes projection so sort keys
         outside the SELECT list work, exactly like the host engines).
-        Returns the relation and the resize step's overflow flag (None
-        when the spine needs no sorts)."""
+        ``ctr`` is the fconsts cursor, shared with the core's filters
+        (which consume their slots first).  Returns the relation and the
+        resize step's overflow flag (None when the spine needs no
+        sorts)."""
         sp = self.spine
-        ctr = [0]
         for expr in sp.filters:
             b = device_filter(b, expr, values, fconsts, ctr)
         mod_ovf = None
         if self._mod_resize:
-            b, mod_ovf = device_resize(b, caps[len(self.plan.steps)])
+            b, mod_ovf = device_resize(b, caps[self._n_pipeline])
         if sp.order:
             b = device_order(b, sp.order, values)
         b = device_project(b, self._out_vars)
@@ -639,13 +968,25 @@ class PlanExecutor:
         return b, mod_ovf
 
     # -- the traced program --------------------------------------------------
-    def _scan_step(self, i: int, meta, table_rows: List[jax.Array],
-                   table_ns: List[jax.Array], bounds: jax.Array,
+    def _scan_step(self, i: int, step: ScanStep, first: bool,
+                   table_rows: List[jax.Array], table_ns: List[jax.Array],
+                   tt_rows: jax.Array, tt_n: jax.Array, bounds: jax.Array,
                    caps: Tuple[int, ...]) -> JBindings:
         """One scan, picking the windowed form when the subject is bound
-        (tables are subject-sorted, see :class:`repro.core.table.Table`)."""
-        s_bound, o_bound, same, take, cols = meta
-        out_cap = caps[i] if i == 0 else table_rows[i].shape[0]
+        (tables are subject-sorted, see :class:`repro.core.table.Table`);
+        TT steps (unbound predicates, ``layout="tt"``) scan the shared
+        padded triples table.  ``first`` marks the first step of a BGP
+        segment, which compacts to its own capacity slot."""
+        if step.uses_tt:
+            s_b, p_b, o_b, eqs, take, cols = _tt_meta(step.tp)
+            out_cap = caps[i] if first else tt_rows.shape[0]
+            sb = bounds[i, 0] if s_b is not None else None
+            ob = bounds[i, 1] if o_b is not None else None
+            data, n, ovf = device_scan_tt(tt_rows, tt_n, sb, p_b, ob,
+                                          eqs, take, out_cap)
+            return JBindings(cols, data, n, ovf)
+        s_bound, o_bound, same, take, cols = _step_meta(step)
+        out_cap = caps[i] if first else table_rows[i].shape[0]
         sb = bounds[i, 0] if s_bound is not None else None
         ob = bounds[i, 1] if o_bound is not None else None
         if s_bound is not None and o_bound is None:
@@ -656,69 +997,129 @@ class PlanExecutor:
                                        same, take, out_cap)
         return JBindings(cols, data, n, ovf)
 
-    def _compose(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
-                 table_ns: List[jax.Array], bounds: jax.Array,
-                 shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]]
-                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-        """The scan/join pipeline both programs run.  Returns
-        (data, n, per_step_overflow[n_steps]): overflow is reported PER
-        STEP so the host retry doubles only the capacities that actually
+    def _compose_bgp(self, seg: BGPSeg, caps: Tuple[int, ...],
+                     table_rows: List[jax.Array], table_ns: List[jax.Array],
+                     tt_rows: jax.Array, tt_n: jax.Array, bounds: jax.Array,
+                     ovfs: List[jax.Array],
+                     shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]]
+                     ) -> JBindings:
+        """The scan/join pipeline of one BGP segment.  Overflow is
+        recorded PER STEP into ``ovfs`` (at the step's flat index) so
+        the host retry doubles only the capacities that actually
         overflowed — wholesale doubling let one heavy constant inflate
         every buffer of the program, which is poison for batched serving
         (all batch elements pay the worst element's caps).  ``shared``
-        maps step index -> precomputed (relation, presorted join key) for
-        bounds-independent scans (empty for the single-request program)."""
-        acc: Optional[JBindings] = None
-        ovfs: List[jax.Array] = []
+        maps flat step index -> precomputed (relation, presorted join
+        key) for bounds-independent scans (empty for the single-request
+        program)."""
         no = jnp.asarray(False)
-        for i, step in enumerate(self.plan.steps):
+        if not seg.plan.steps:
+            # empty BGP: the unit relation (one empty solution mapping)
+            return JBindings((), jnp.zeros((8, 0), jnp.int32),
+                             jnp.asarray(1, jnp.int32), no)
+        acc: Optional[JBindings] = None
+        for k, step in enumerate(seg.plan.steps):
+            i = seg.start + k
             if i in shared:
                 cur, pre = shared[i]
             else:
-                cur = self._scan_step(i, _step_meta(step), table_rows,
-                                      table_ns, bounds, caps)
+                cur = self._scan_step(i, step, k == 0, table_rows, table_ns,
+                                      tt_rows, tt_n, bounds, caps)
                 pre = None
             if acc is None:
                 acc = cur
-                ovfs.append(cur.overflow)
+                ovfs[i] = cur.overflow
             else:
                 # strip sticky input flags: we want this join's OWN overflow
                 joined = device_join(
                     JBindings(acc.cols, acc.data, acc.n, no),
                     JBindings(cur.cols, cur.data, cur.n, no), caps[i],
                     b_presorted=pre)
-                ovfs.append(joined.overflow | cur.overflow)
+                ovfs[i] = joined.overflow | cur.overflow
                 acc = joined
         assert acc is not None
-        return acc.data, acc.n, jnp.stack(ovfs)
+        return JBindings(acc.cols, acc.data, acc.n, no)
+
+    def _eval_seg(self, seg: CoreSeg, caps: Tuple[int, ...],
+                  table_rows: List[jax.Array], table_ns: List[jax.Array],
+                  tt_rows: jax.Array, tt_n: jax.Array, bounds: jax.Array,
+                  fconsts: jax.Array, values: jax.Array, ctr: List[int],
+                  ovfs: List[jax.Array],
+                  shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]]
+                  ) -> JBindings:
+        """Evaluate the core segment tree to one static relation.  Each
+        combine writes its own overflow flag at its capacity index;
+        child flags are recorded at the children, so every returned
+        relation carries a clean (False) sticky flag."""
+        no = jnp.asarray(False)
+        if isinstance(seg, EmptySeg):
+            k = len(seg.vars)
+            return JBindings(tuple(seg.vars),
+                             jnp.full((8, k), PAD, jnp.int32),
+                             jnp.asarray(0, jnp.int32), no)
+        if isinstance(seg, BGPSeg):
+            return self._compose_bgp(seg, caps, table_rows, table_ns,
+                                     tt_rows, tt_n, bounds, ovfs, shared)
+        if isinstance(seg, FilterSeg):
+            b = self._eval_seg(seg.child, caps, table_rows, table_ns,
+                               tt_rows, tt_n, bounds, fconsts, values, ctr,
+                               ovfs, shared)
+            return device_filter(b, seg.expr, values, fconsts, ctr)
+        left = self._eval_seg(seg.left, caps, table_rows, table_ns,
+                              tt_rows, tt_n, bounds, fconsts, values, ctr,
+                              ovfs, shared)
+        right = self._eval_seg(seg.right, caps, table_rows, table_ns,
+                               tt_rows, tt_n, bounds, fconsts, values, ctr,
+                               ovfs, shared)
+        ci = self._comb_index[id(seg)]
+        if seg.kind == "join":
+            out = device_join(left, right, caps[ci])
+        elif seg.kind == "left":
+            out = device_left_join(left, right, caps[ci], seg.expr,
+                                   values, fconsts, ctr)
+        else:
+            out = device_union(left, right, caps[ci])
+        ovfs[ci] = out.overflow
+        return JBindings(out.cols, out.data, out.n, no)
 
     def _program(self, caps: Tuple[int, ...], table_rows: List[jax.Array],
-                 table_ns: List[jax.Array], bounds: jax.Array,
-                 fconsts: jax.Array,
+                 table_ns: List[jax.Array], tt_rows: jax.Array,
+                 tt_n: jax.Array, bounds: jax.Array, fconsts: jax.Array,
                  values: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
         global _TRACE_COUNT
         _TRACE_COUNT += 1
-        data, n, ovfs = self._compose(caps, table_rows, table_ns, bounds, {})
-        b, mod_ovf = self._apply_spine(
-            JBindings(self._pipe_cols, data, n, jnp.asarray(False)),
-            values, fconsts, caps)
+        ctr = [0]
+        ovfs: List[jax.Array] = [jnp.asarray(False)] * self._n_pipeline
+        b = self._eval_seg(self.core.root, caps, table_rows, table_ns,
+                           tt_rows, tt_n, bounds, fconsts, values, ctr,
+                           ovfs, {})
+        b, mod_ovf = self._apply_spine(b, values, fconsts, caps, ctr)
+        stacked = jnp.stack(ovfs) if ovfs else jnp.zeros((0,), bool)
         if mod_ovf is not None:
-            ovfs = jnp.concatenate([ovfs, mod_ovf[None]])
-        return b.data, b.n, ovfs
+            stacked = jnp.concatenate([stacked, mod_ovf[None]])
+        return b.data, b.n, stacked
 
     @functools.cached_property
     def _device_inputs(self) -> Tuple[List[jax.Array], List[jax.Array],
-                                      jax.Array]:
-        """Device-resident padded tables + the dictionary value table,
-        uploaded ONCE per executor — the hot path must not re-pad and
-        re-transfer O(table) bytes on every launch."""
-        rows = [jnp.asarray(t.to_device().rows) for t in self.tables]
-        ns = [jnp.asarray(np.int32(len(t))) for t in self.tables]
-        vals = self.catalog.dictionary.values \
-            if self.catalog.dictionary is not None \
-            else np.empty(0, dtype=np.float64)
-        values = jnp.asarray(vals.astype(np.float32))
-        return rows, ns, values
+                                      jax.Array, jax.Array, jax.Array]:
+        """Device-resident padded tables + the (optional) padded triples
+        table + the numeric key table, uploaded ONCE per executor — the
+        hot path must not re-pad and re-transfer O(table) bytes on every
+        launch."""
+        rows = [jnp.zeros((0, 2), jnp.int32) if t is None
+                else jnp.asarray(t.to_device().rows) for t in self.tables]
+        ns = [jnp.asarray(np.int32(0 if t is None else len(t)))
+              for t in self.tables]
+        if self._has_tt:
+            tt = np.asarray(self.catalog.tt, dtype=np.int32)
+            tt_rows = jnp.asarray(
+                pad_rows(tt, round_up_pow2(max(len(tt), 1))))
+            tt_n = jnp.asarray(np.int32(len(tt)))
+        else:
+            tt_rows = jnp.zeros((0, 3), jnp.int32)
+            tt_n = jnp.asarray(np.int32(0))
+        values = jnp.asarray(self._value_keys)
+        return rows, ns, tt_rows, tt_n, values
 
     @functools.cached_property
     def _jitted(self):
@@ -727,58 +1128,84 @@ class PlanExecutor:
     # -- the batched traced program --------------------------------------------
     def _program_batched(self, caps: Tuple[int, ...],
                          table_rows: List[jax.Array],
-                         table_ns: List[jax.Array],
-                         bounds_b: jax.Array, fconsts_b: jax.Array,
-                         values: jax.Array
+                         table_ns: List[jax.Array], tt_rows: jax.Array,
+                         tt_n: jax.Array, bounds_b: jax.Array,
+                         fconsts_b: jax.Array, values: jax.Array
                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """B constant-bindings of the template in one program.
 
         Constants only enter scan *selection values*, so any step whose
         triple pattern binds no constant produces the same relation for
         every batch element.  Those scans — and the build-side sort of
-        the joins that consume them — are hoisted OUT of the vmap and
-        computed once per launch; only the constant-dependent scans and
-        the (capacity-bounded, small) probe/expand phases replicate per
-        element.  This is what makes a batch ~O(shared + B·small) instead
-        of B times the full per-request program.
+        the joins that consume them — are hoisted OUT of the vmap (per
+        BGP segment) and computed once per launch; only the
+        constant-dependent scans and the (capacity-bounded, small)
+        probe/expand/combine phases replicate per element.  This is what
+        makes a batch ~O(shared + B·small) instead of B times the full
+        per-request program.
         """
         global _TRACE_COUNT
         _TRACE_COUNT += 1
-        plan = self.plan
-        metas = [_step_meta(s) for s in plan.steps]
 
         # shared phase: bounds-independent scans + their join-key presort
         shared: Dict[int, Tuple[JBindings, Optional[Tuple[jax.Array, jax.Array]]]] = {}
-        acc_cols: List[str] = []
-        for i, step in enumerate(plan.steps):
-            s_bound, o_bound, same, take, cols = metas[i]
-            if i > 0 and s_bound is None and o_bound is None:
-                data, n, ovf = device_scan(table_rows[i], table_ns[i], None,
-                                           None, same, take,
-                                           table_rows[i].shape[0])
-                cur = JBindings(cols, data, n, ovf)
-                # the join key device_join will pick: first accumulated
-                # column present on the build side
-                key = next((c for c in acc_cols if c in cols), None)
-                pre = None
-                if key is not None:
-                    kb = build_key(cur, cols.index(key))
-                    order_b = jnp.argsort(kb).astype(jnp.int32)
-                    pre = (order_b, kb[order_b])
-                shared[i] = (cur, pre)
-            for c in cols:
-                if c not in acc_cols:
-                    acc_cols.append(c)
+
+        def hoist(seg: CoreSeg) -> None:
+            if isinstance(seg, FilterSeg):
+                hoist(seg.child)
+                return
+            if isinstance(seg, CombineSeg):
+                hoist(seg.left)
+                hoist(seg.right)
+                return
+            if not isinstance(seg, BGPSeg):
+                return
+            acc_cols: List[str] = []
+            for k, step in enumerate(seg.plan.steps):
+                i = seg.start + k
+                if step.uses_tt:
+                    s_b, p_b, o_b, eqs, take, cols = _tt_meta(step.tp)
+                    indep = k > 0 and s_b is None and o_b is None
+                    if indep:
+                        data, n, ovf = device_scan_tt(
+                            tt_rows, tt_n, None, p_b, None, eqs, take,
+                            tt_rows.shape[0])
+                        cur = JBindings(cols, data, n, ovf)
+                else:
+                    s_bound, o_bound, same, take, cols = _step_meta(step)
+                    indep = k > 0 and s_bound is None and o_bound is None
+                    if indep:
+                        data, n, ovf = device_scan(
+                            table_rows[i], table_ns[i], None, None, same,
+                            take, table_rows[i].shape[0])
+                        cur = JBindings(cols, data, n, ovf)
+                if indep:
+                    # the join key device_join will pick: first
+                    # accumulated column present on the build side
+                    key = next((c for c in acc_cols if c in cols), None)
+                    pre = None
+                    if key is not None:
+                        kb = build_key(cur, cols.index(key))
+                        order_b = jnp.argsort(kb).astype(jnp.int32)
+                        pre = (order_b, kb[order_b])
+                    shared[i] = (cur, pre)
+                for c in cols:
+                    if c not in acc_cols:
+                        acc_cols.append(c)
+
+        hoist(self.core.root)
 
         def one(b, fc):
-            data, n, ovfs = self._compose(caps, table_rows, table_ns, b,
-                                          shared)
-            jb, mod_ovf = self._apply_spine(
-                JBindings(self._pipe_cols, data, n, jnp.asarray(False)),
-                values, fc, caps)
+            ctr = [0]
+            ovfs: List[jax.Array] = [jnp.asarray(False)] * self._n_pipeline
+            jb = self._eval_seg(self.core.root, caps, table_rows, table_ns,
+                                tt_rows, tt_n, b, fc, values, ctr, ovfs,
+                                shared)
+            jb, mod_ovf = self._apply_spine(jb, values, fc, caps, ctr)
+            stacked = jnp.stack(ovfs) if ovfs else jnp.zeros((0,), bool)
             if mod_ovf is not None:
-                ovfs = jnp.concatenate([ovfs, mod_ovf[None]])
-            return jb.data, jb.n, ovfs
+                stacked = jnp.concatenate([stacked, mod_ovf[None]])
+            return jb.data, jb.n, stacked
 
         return jax.vmap(one)(bounds_b, fconsts_b)
 
@@ -790,21 +1217,25 @@ class PlanExecutor:
 
     def lower(self, caps: Optional[Tuple[int, ...]] = None):
         caps = caps or tuple(self.caps)
-        rows = [jax.ShapeDtypeStruct((round_up_pow2(len(t)), 2), jnp.int32)
-                for t in self.tables]
+        rows = [jax.ShapeDtypeStruct(
+                    (0 if t is None else round_up_pow2(len(t)), 2),
+                    jnp.int32) for t in self.tables]
         ns = [jax.ShapeDtypeStruct((), jnp.int32) for _ in self.tables]
+        tt_cap = round_up_pow2(max(self.catalog.n_triples, 1)) \
+            if self._has_tt else 0
+        ttshape = jax.ShapeDtypeStruct((tt_cap, 3), jnp.int32)
+        ttn = jax.ShapeDtypeStruct((), jnp.int32)
         bshape = jax.ShapeDtypeStruct(self._default_bounds.shape, jnp.int32)
         fshape = jax.ShapeDtypeStruct((len(self.filter_slots),), jnp.int32)
-        nv = len(self.catalog.dictionary) \
-            if self.catalog.dictionary is not None else 0
-        vshape = jax.ShapeDtypeStruct((nv,), jnp.float32)
-        return self._jitted.lower(caps, rows, ns, bshape, fshape, vshape)
+        vshape = jax.ShapeDtypeStruct(self._value_keys.shape, jnp.float32)
+        return self._jitted.lower(caps, rows, ns, ttshape, ttn, bshape,
+                                  fshape, vshape)
 
-    def run(self, max_retries: int = 8,
+    def run(self, max_retries: int = 16,
             bounds: Optional[np.ndarray] = None,
             fconsts: Optional[np.ndarray] = None
             ) -> Tuple[np.ndarray, Tuple[str, ...]]:
-        rows, ns, values = self._device_inputs
+        rows, ns, tt_rows, tt_n, values = self._device_inputs
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
         bj = jnp.asarray(b)
@@ -813,7 +1244,8 @@ class PlanExecutor:
         fj = jnp.asarray(fc)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, n, ovf = self._jitted(caps, rows, ns, bj, fj, values)
+            data, n, ovf = self._jitted(caps, rows, ns, tt_rows, tt_n,
+                                        bj, fj, values)
             ovf = np.asarray(ovf)
             if not ovf.any():
                 # keep grown caps: a hot template must not pay the
@@ -822,12 +1254,12 @@ class PlanExecutor:
                 n = int(n)
                 cols = self._final_cols()
                 return np.asarray(data)[:n], cols
-            caps = double_caps(caps, ovf, len(self.plan.steps))
+            caps = double_caps(caps, ovf, self._n_pipeline)
         raise RuntimeError("join capacity overflow after retries")
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
                   fconsts_batch: Optional[Sequence[np.ndarray]] = None,
-                  max_retries: int = 8) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+                  max_retries: int = 16) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of this template's program in ONE
         XLA launch: the (B, n_steps, 2) bounds stack and the (B, n_fc)
         filter-constant stack are the only batched inputs (tables
@@ -837,7 +1269,7 @@ class PlanExecutor:
         keeps the program count at one per (caps, B)."""
         if not bounds_batch:
             return []
-        rows, ns, values = self._device_inputs
+        rows, ns, tt_rows, tt_n, values = self._device_inputs
         shape = self._default_bounds.shape
         bb = np.stack([np.asarray(b, dtype=np.int32).reshape(shape)
                        for b in bounds_batch])
@@ -851,8 +1283,9 @@ class PlanExecutor:
         fj = jnp.asarray(fb)
         caps = tuple(self.caps)
         for _ in range(max_retries):
-            data, n, ovf = self._jitted_batch(caps, rows, ns, bj, fj, values)
-            ovf = np.asarray(ovf)                # (B, n_steps)
+            data, n, ovf = self._jitted_batch(caps, rows, ns, tt_rows,
+                                              tt_n, bj, fj, values)
+            ovf = np.asarray(ovf)                # (B, n_pipeline[+1])
             if not ovf.any():
                 self.caps = list(caps)
                 cols = self._final_cols()
@@ -860,7 +1293,7 @@ class PlanExecutor:
                 n = np.asarray(n)
                 return [(data[i, : int(n[i])], cols)
                         for i in range(data.shape[0])]
-            caps = double_caps(caps, ovf.any(axis=0), len(self.plan.steps))
+            caps = double_caps(caps, ovf.any(axis=0), self._n_pipeline)
         raise RuntimeError("join capacity overflow after retries (batched)")
 
     def _final_cols(self) -> Tuple[str, ...]:

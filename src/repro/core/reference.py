@@ -142,6 +142,8 @@ def _eval(node: Node, triples: np.ndarray, values: np.ndarray) -> List[Mapping]:
         for var, asc in reversed(node.keys):
             def key(m):
                 tid = m.get(var, UNBOUND)
+                if tid == UNBOUND:
+                    return float("inf")   # NULLS LAST, like the engines
                 v = float(values[tid]) if 0 <= tid < len(values) else float("nan")
                 return float(tid) if np.isnan(v) else v
             res = sorted(res, key=key, reverse=not asc)
@@ -184,6 +186,8 @@ def execute_reference(query: Query, triples: np.ndarray,
     for var, asc in reversed(spine.order):   # pre-projection, W3C order
         def key(m, var=var):
             tid = m.get(var, UNBOUND)
+            if tid == UNBOUND:
+                return float("inf")       # NULLS LAST, like the engines
             v = float(values[tid]) if 0 <= tid < len(values) else float("nan")
             return float(tid) if np.isnan(v) else v
         res = sorted(res, key=key, reverse=not asc)

@@ -32,7 +32,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.algebra import BGP, Query
-from repro.core.compiler import Plan, compile_bgp
+from repro.core.compiler import Plan, compile_bgp, compile_core
 from repro.core.executor import (
     Bindings, apply_spine_host, execute, execute_plan,
 )
@@ -259,12 +259,15 @@ class EagerBackend(ExecutionBackend):
 
 
 class JitBackend(ExecutionBackend):
-    """Queries whose modifier spine (FILTER* / DISTINCT / ORDER BY /
-    LIMIT / OFFSET, see :func:`repro.core.modifiers.peel_spine`) sits on
-    a BGP core compile end-to-end into the static-shape device program.
-    Cores the device path cannot express — OPTIONAL/UNION/JoinPair trees,
-    TT-layout scans (unbound predicates) — run on the eager path (same
-    results) and are flagged ``fallback`` so the Engine can count them."""
+    """The full graph-pattern fragment — BGP/FILTER/OPTIONAL/UNION cores
+    plus unbound-predicate (triples-table) scans, under any modifier
+    spine (see :func:`repro.core.modifiers.peel_spine`) — compiles
+    end-to-end into the static-shape device program via
+    :func:`repro.core.compiler.compile_core`.  The remaining eager
+    fallbacks (flagged so the Engine can count them) are the host-only
+    ``pt`` storage layout and dictionaries whose numeric keys defeat the
+    double-single encoding — both surface as NotImplementedError during
+    prepare, never as silent divergence at run time."""
 
     name = "jit"
 
@@ -272,14 +275,12 @@ class JitBackend(ExecutionBackend):
         if ctx.layout == "pt":
             return _EagerPrepared(template, ctx, fallback=True)
         core, spine = peel_spine(template.query)
-        if not isinstance(core, BGP):
-            return _EagerPrepared(template, ctx, fallback=True)
-        plan = compile_bgp(core, ctx.catalog, ctx.layout)
-        if plan.empty:
-            return _EmptyPrepared(template, ctx, self.name)
         from repro.core.jexec import PlanExecutor
         try:
-            ex = PlanExecutor(plan, ctx.catalog, spine=spine)
+            cp = compile_core(core, ctx.catalog, ctx.layout)
+            if cp.empty:
+                return _EmptyPrepared(template, ctx, self.name)
+            ex = PlanExecutor(cp, ctx.catalog, spine=spine)
         except NotImplementedError:
             return _EagerPrepared(template, ctx, fallback=True)
         return _JitPrepared(template, ctx, ex)
@@ -297,14 +298,12 @@ class DistributedBackend(ExecutionBackend):
         if ctx.layout == "pt":
             return _EagerPrepared(template, ctx, fallback=True)
         core, spine = peel_spine(template.query)
-        if not isinstance(core, BGP):
-            return _EagerPrepared(template, ctx, fallback=True)
-        plan = compile_bgp(core, ctx.catalog, ctx.layout)
-        if plan.empty:
-            return _EmptyPrepared(template, ctx, self.name)
         from repro.core.distributed import DistributedExecutor
         try:
-            ex = DistributedExecutor(plan, ctx.catalog, ctx.mesh,
+            cp = compile_core(core, ctx.catalog, ctx.layout)
+            if cp.empty:
+                return _EmptyPrepared(template, ctx, self.name)
+            ex = DistributedExecutor(cp, ctx.catalog, ctx.mesh,
                                      dual_partition=self.dual_partition,
                                      spine=spine)
         except NotImplementedError:

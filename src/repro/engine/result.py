@@ -65,16 +65,25 @@ class Result:
     # -- comparison (SPARQL bag semantics) -----------------------------------
     def as_multiset(self, cols: Optional[Sequence[str]] = None) -> Counter:
         """Bag of solution tuples over ``cols`` (default: sorted columns,
-        making the bag independent of backend column order)."""
+        making the bag independent of backend column order).  Columns in
+        ``cols`` the relation does not carry are UNBOUND-filled — a
+        variable a backend dropped entirely and one it materialized as
+        all-UNBOUND encode the same solution mapping, so both
+        canonicalize to the same tuples."""
         order = sorted(self.cols) if cols is None else list(cols)
-        idx = [self.cols.index(c) for c in order]
-        if not idx:
-            return Counter({(): len(self)}) if len(self) else Counter()
-        return Counter(map(tuple, self.bindings.data[:, idx].tolist()))
+        n = len(self)
+        if not order:
+            return Counter({(): n}) if n else Counter()
+        arrs = [self.bindings.data[:, self.cols.index(c)] if c in self.cols
+                else np.full(n, UNBOUND, dtype=np.int32) for c in order]
+        return Counter(map(tuple, np.stack(arrs, axis=1).tolist()))
 
     def same_as(self, other: "Result") -> bool:
-        """Multiset equality over the shared column set; False when the
-        two results bind different variables."""
-        if set(self.cols) != set(other.cols):
-            return False
-        return self.as_multiset() == other.as_multiset()
+        """Multiset equality under SPARQL bag semantics.  Both sides are
+        canonicalized over the UNION of their column sets (missing
+        columns are UNBOUND-filled), so rows differing only in
+        UNBOUND-vs-missing columns compare equal — previously a result
+        binding strictly more (all-UNBOUND) columns was never equal to
+        one omitting them, which let left-join tests pass vacuously."""
+        cols = sorted(set(self.cols) | set(other.cols))
+        return self.as_multiset(cols) == other.as_multiset(cols)

@@ -70,6 +70,11 @@ class RuntimeConfig:
         self.router_discard = _env_int("REPRO_RT_DISCARD", 1)
         # ring-buffer length of the per-decision log in runtime_report()
         self.router_log_size = _env_int("REPRO_RT_LOG_SIZE", 256)
+        # every Nth request of a signature clears its *fallback* exclusions
+        # so backends that gained coverage (e.g. after an engine upgrade
+        # compiled formerly-fallback operators) are re-tried; ``failed``
+        # exclusions (prepare raised) stay permanent.  0 disables.
+        self.router_readmit_every = _env_int("REPRO_RT_READMIT_EVERY", 512)
 
         ######## Batch-shape tuner ########
         # launches a bucket needs before it can be retired (or retire

@@ -26,6 +26,13 @@ Lifecycle of a signature:
    (``PreparedQuery.fallback``), is excluded for that signature and the
    router deterministically re-routes; routing to a device backend that
    would run eager code adds overhead and pollutes the estimates.
+   Fallback exclusions are **re-admitted** every
+   ``router_readmit_every`` requests: a fallback records a *coverage*
+   limit of the prepared program, and coverage grows (the device path
+   now compiles OPTIONAL/UNION and unbound predicates that used to bail
+   out), so formerly-excluded signatures must become routable again
+   without a process restart.  ``failed`` exclusions (prepare raised)
+   stay permanent.
 
 Every decision is pure bookkeeping over observed latencies — inject a
 clock / scripted latencies and the whole history is reproducible
@@ -63,6 +70,7 @@ class _SigState:
     requests: int = 0
     probes: int = 0
     switches: int = 0
+    readmits: int = 0
     choice: Optional[str] = None
     reason: str = "warmup"
 
@@ -156,6 +164,14 @@ class BackendRouter:
         st.requests += n
         every = self.config.router_probe_every
         crossed = every > 0 and (before // every) != (st.requests // every)
+        readmit = self.config.router_readmit_every
+        if st.fallback and readmit > 0 and \
+                (before // readmit) != (st.requests // readmit):
+            # periodic coverage re-check: the next prepare of a cleared
+            # backend either compiles for real now or marks it fallback
+            # again — one extra prepare per window, not per request
+            st.fallback.clear()
+            st.readmits += 1
         d = self._pick(sig, probe_ok=crossed)
         if d.reason != "probe":
             # a switch is a *measured* change of seat — warmup rotation
@@ -210,6 +226,7 @@ class BackendRouter:
                 "requests": st.requests,
                 "probes": st.probes,
                 "switches": st.switches,
+                "readmits": st.readmits,
                 "ewma_ms": {b: round(v, 4) for b, v in st.ewma_ms.items()},
                 "samples": dict(st.samples),
                 "failed": sorted(st.failed),

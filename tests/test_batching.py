@@ -53,6 +53,34 @@ def test_batch_parity_distributed(ds):
         assert got.same_as(oracle.query(q)), q
 
 
+def _optional_union_instances(n, start=1):
+    opt = [f"SELECT * WHERE {{ wsdbm:User{u} wsdbm:follows ?v "
+           f"OPTIONAL {{ ?v sorg:email ?e }} }}"
+           for u in range(start, start + n)]
+    uni = [f"SELECT * WHERE {{ {{ wsdbm:User{u} wsdbm:follows ?v }} "
+           f"UNION {{ wsdbm:User{u} wsdbm:likes ?v }} }} ORDER BY ?v"
+           for u in range(start, start + n)]
+    return opt + uni
+
+
+@pytest.mark.parametrize("backend", ["jit", "auto"])
+def test_batch_parity_optional_union(ds, backend):
+    """OPTIONAL and UNION templates — now device-compiled — keep exact
+    batched-vs-sequential parity, including under ``backend="auto"``
+    where the router may land them on either substrate.  No instance may
+    fall back to the host path."""
+    eng = Engine(ds, backend=backend)
+    oracle = Engine(ds, backend="eager")
+    queries = _optional_union_instances(6)
+    batched = eng.query_batch(queries)
+    for q, got in zip(queries, batched):
+        assert got.same_as(oracle.query(q)), q
+    sequential = [eng.query(q) for q in queries]
+    for q, got, want in zip(queries, batched, sequential):
+        assert got.same_as(want), q
+    assert eng.metrics.device_fallbacks == 0
+
+
 def test_prepared_run_batch_matches_run_loop(ds):
     """PreparedQuery.run_batch == [run(b) for b] on the device backend,
     including missing-constant short-circuits inside the batch."""

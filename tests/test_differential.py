@@ -10,9 +10,13 @@ Comparison rules:
   oracle's and every returned row must come from the oracle's pre-slice
   bag (with ties, SPARQL does not pin which equal-key rows survive a
   cut, and the backends may break ties differently than the oracle);
-* jit must match eager ROW FOR ROW on every query — the device modifier
-  pipeline implements the same canonical project → distinct → order →
-  slice sequence with the same stable tie-breaking.
+* jit and distributed must match eager ROW FOR ROW on every query — the
+  device pipeline implements the same canonical join → left-join →
+  union → project → distinct → order → slice sequence with the same
+  stable tie-breaking;
+* the device backends must answer the whole corpus — OPTIONAL, UNION,
+  unbound predicates, and every modifier spine — with
+  ``device_fallbacks == 0``.
 
 This systematically sweeps the backend × τ × catalog-build surface that
 hand-picked queries cannot cover; it runs under ``_hypothesis_shim``
@@ -44,26 +48,27 @@ def random_triples(rng, n_ent, n_preds, n_triples):
              f"e{rng.integers(0, n_ent)}") for _ in range(n_triples)]
 
 
-def _random_pattern(rng, subj, obj, n_ent, n_preds):
+def _random_pattern(rng, subj, obj, n_ent, n_preds, pred=None):
     """One triple pattern; var/constant mix on s and o, bound predicate
-    (random constants may reference terms absent from the graph — the
-    statistics short-circuit path)."""
+    unless ``pred`` names a variable (random constants may reference
+    terms absent from the graph — the statistics short-circuit path)."""
     s = subj if rng.random() < 0.8 else f"e{rng.integers(0, n_ent)}"
     o = obj if rng.random() < 0.8 else f"e{rng.integers(0, n_ent)}"
-    p = f"p{rng.integers(0, n_preds)}"
+    p = pred if pred is not None else f"p{rng.integers(0, n_preds)}"
     return f"{s} {p} {o}"
 
 
 def random_query(rng, n_ent, n_preds):
     """A random query: a chained BGP, optionally wrapped in FILTER /
-    OPTIONAL / UNION, under a random solution-modifier spine (DISTINCT /
-    ORDER BY / LIMIT / OFFSET).  BGP cores with modifiers compile onto
-    the device path of the jit/distributed backends; other cores route
-    them through the (counted) eager fallback."""
+    OPTIONAL / UNION / unbound-predicate / nested shapes, under a random
+    solution-modifier spine (DISTINCT / ORDER BY / LIMIT / OFFSET) drawn
+    independently of the shape — every core class is exercised WITH
+    modifiers.  All of these compile onto the device path of the
+    jit/distributed backends (``device_fallbacks`` stays 0)."""
     n_pat = int(rng.integers(1, 4))
     pats = [_random_pattern(rng, f"?v{i}", f"?v{i + 1}", n_ent, n_preds)
             for i in range(n_pat)]
-    shape = rng.integers(0, 5)
+    shape = rng.integers(0, 8)
     if shape == 0:                      # plain BGP
         body = " . ".join(pats)
     elif shape == 1:                    # FILTER over the chain vars
@@ -74,9 +79,22 @@ def random_query(rng, n_ent, n_preds):
     elif shape == 3:                    # UNION of two chains
         alt = _random_pattern(rng, "?v0", "?v1", n_ent, n_preds)
         body = f"{{ {' . '.join(pats)} }} UNION {{ {alt} }}"
-    else:                               # boolean FILTER combinators
+    elif shape == 4:                    # boolean FILTER combinators
         body = " . ".join(pats) + \
             f" FILTER(?v0 != ?v{n_pat} || !(?v0 = ?v1) && BOUND(?v0))"
+    elif shape == 5:                    # unbound predicate in the chain
+        k = int(rng.integers(0, n_pat))
+        pats[k] = _random_pattern(rng, f"?v{k}", f"?v{k + 1}", n_ent,
+                                  n_preds, pred="?q")
+        body = " . ".join(pats)
+    elif shape == 6:                    # full triples scan + OPTIONAL
+        opt = _random_pattern(rng, "?v1", "?w", n_ent, n_preds)
+        body = f"?v0 ?q ?v1 OPTIONAL {{ {opt} }}"
+    else:                               # OPTIONAL nested under UNION
+        opt = _random_pattern(rng, f"?v{n_pat}", "?w", n_ent, n_preds)
+        alt = _random_pattern(rng, "?v0", "?v1", n_ent, n_preds)
+        body = (f"{{ {' . '.join(pats)} OPTIONAL {{ {opt} }} }} "
+                f"UNION {{ {alt} }}")
 
     distinct = "DISTINCT " if rng.random() < 0.4 else ""
     tail = ""
@@ -160,10 +178,18 @@ def test_backends_match_reference(data):
             results[name] = res
             assert_matches_oracle(res, qtext, d, tt,
                                   (seed, tau, name, qi))
-        # the jit modifier pipeline must reproduce eager row-for-row
+        # the device pipelines must reproduce eager row-for-row
         assert_rows_equal(results["jit/numpy-built"],
                           results["eager/numpy-built"],
                           (seed, tau, "jit-vs-eager", qtext))
+        assert_rows_equal(results["distributed/numpy-built"],
+                          results["eager/numpy-built"],
+                          (seed, tau, "dist-vs-eager", qtext))
+    # every fuzzed query — OPTIONAL / UNION / unbound predicates and all
+    # modifier spines included — compiled onto the device path
+    for name, eng in engines:
+        if "eager" not in name:
+            assert eng.metrics.device_fallbacks == 0, (seed, tau, name)
 
 
 def test_differential_fixed_seed_regressions():
@@ -186,9 +212,27 @@ def test_differential_fixed_seed_regressions():
         "ORDER BY ?v0 ?v1 LIMIT 5",
         "SELECT ?v1 WHERE { ?v0 p0 ?v1 } ORDER BY ?v1 LIMIT 3 OFFSET 2",
         "SELECT DISTINCT ?v1 WHERE { e1 p0 ?v1 } ORDER BY DESC(?v1) LIMIT 2",
-        # modifier spine over a non-BGP core (counted eager fallback)
+        # modifier spines over non-BGP cores (device-compiled too)
         "SELECT DISTINCT ?v0 WHERE { { ?v0 p0 ?v1 } UNION { ?v0 p1 ?v1 } } "
         "ORDER BY ?v0 LIMIT 4",
+        "SELECT * WHERE { ?v0 p0 ?v1 OPTIONAL { ?v1 p1 ?w } } "
+        "ORDER BY ?w ?v0 LIMIT 5",
+        "SELECT DISTINCT ?w WHERE { ?v0 p0 ?v1 OPTIONAL { ?v1 p1 ?w } }",
+        "SELECT * WHERE { ?v0 p0 ?v1 "
+        "OPTIONAL { ?v1 p1 ?w FILTER(?w != ?v0) } }",
+        "SELECT * WHERE { ?v0 p0 ?v1 OPTIONAL { ?v1 p1 ?w } "
+        "FILTER(BOUND(?w) || ?v0 != ?v1) }",
+        # unbound predicates: full TT scans, joins through ?q
+        "SELECT * WHERE { ?v0 ?q ?v1 }",
+        "SELECT * WHERE { ?v0 ?q ?v0 }",
+        "SELECT DISTINCT ?q WHERE { ?v0 ?q ?v1 } ORDER BY ?q",
+        "SELECT * WHERE { ?v0 ?q ?v1 . ?v1 p0 ?v2 } "
+        "ORDER BY ?v1 DESC(?v0) LIMIT 6",
+        # nested shapes: OPTIONAL / unbound predicate under UNION
+        "SELECT * WHERE { { ?v0 p0 ?v1 OPTIONAL { ?v1 ?q ?w } } "
+        "UNION { ?v0 p1 ?v1 } } ORDER BY ?v1 LIMIT 7",
+        "SELECT DISTINCT * WHERE { { ?v0 p0 ?v1 } UNION { ?v0 p1 ?v1 } } "
+        "ORDER BY DESC(?v1) ?v0",
     ]
     mesh = jax.make_mesh((1,), ("data",))
     for tau in TAUS:
@@ -202,5 +246,11 @@ def test_differential_fixed_seed_regressions():
                 res = eng.query(qtext)
                 per_backend[backend] = res
                 assert_matches_oracle(res, qtext, d, tt, (tau, backend))
+                if backend != "eager":
+                    assert eng.metrics.device_fallbacks == 0, \
+                        (tau, backend, qtext)
             assert_rows_equal(per_backend["jit"], per_backend["eager"],
                               (tau, "jit-vs-eager", qtext))
+            assert_rows_equal(per_backend["distributed"],
+                              per_backend["eager"],
+                              (tau, "dist-vs-eager", qtext))

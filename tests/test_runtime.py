@@ -303,17 +303,50 @@ def test_auto_never_routes_to_failing_backend(ds):
 def test_auto_excludes_device_fallback_preparations(ds):
     """A template the device path cannot express (prepared.fallback) is
     never routed to the device backend — eager latencies must not be
-    measured under the jit label."""
+    measured under the jit label.  OPTIONAL/UNION/unbound predicates all
+    device-compile now, so the host-only ``layout="pt"`` storage format
+    is the exemplar fallback class."""
     eng = ds.engine(
-        "auto", runtime=RuntimeConfig(router_warmup=1, router_discard=0))
-    q = ("SELECT * WHERE { ?v0 wsdbm:likes ?v1 . "
-         "OPTIONAL { ?v0 sorg:email ?e } }")
+        "auto", layout="pt",
+        runtime=RuntimeConfig(router_warmup=1, router_discard=0))
+    q = "SELECT * WHERE { ?v0 wsdbm:likes ?v1 }"
     for _ in range(4):
         eng.query(q)
     st = eng.router.report()["signatures"][template_signature(q)]
     assert st["fallback"] == ["jit"]
     assert st["choice"] == "eager"
     assert eng.metrics.device_fallbacks == 0
+    ds._engines.clear()
+
+
+def test_auto_readmits_fallback_exclusions(ds):
+    """Fallback exclusions are coverage records, not verdicts: every
+    ``router_readmit_every`` requests the set is cleared and the next
+    prepare re-tests the backend.  On a still-uncovered template (pt
+    layout) the backend is re-excluded and eager keeps the seat; the
+    ``readmits`` counter records each re-check."""
+    eng = ds.engine(
+        "auto", layout="pt",
+        runtime=RuntimeConfig(router_warmup=1, router_discard=0,
+                              router_readmit_every=6))
+    q = "SELECT * WHERE { ?v0 wsdbm:likes ?v1 }"
+    for _ in range(14):
+        eng.query(q)
+    st = eng.router.report()["signatures"][template_signature(q)]
+    assert st["readmits"] == 2                   # requests 6 and 12
+    assert st["fallback"] == ["jit"]             # re-excluded each time
+    assert st["choice"] == "eager"
+    assert eng.metrics.device_fallbacks == 0
+    # readmit_every=0 disables the mechanism entirely
+    eng2 = ds.engine(
+        "auto", layout="pt",
+        runtime=RuntimeConfig(router_warmup=1, router_discard=0,
+                              router_readmit_every=0))
+    for _ in range(14):
+        eng2.query(q)
+    st2 = eng2.router.report()["signatures"][template_signature(q)]
+    assert st2["readmits"] == 0
+    assert st2["fallback"] == ["jit"]
     ds._engines.clear()
 
 

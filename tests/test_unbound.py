@@ -1,0 +1,168 @@
+"""Property tests for the UNBOUND sentinel.
+
+``UNBOUND = -1`` is the engine-wide encoding of an unbound variable in
+OPTIONAL / UNION solutions.  These tests pin its contract:
+
+* it can never collide with a dictionary id (ids are dense in
+  ``[0, n_terms)``) no matter which terms the graph contains;
+* ``Result.to_terms()`` omits unbound slots instead of decoding them;
+* DISTINCT treats UNBOUND as a first-class value per the W3C multiset
+  semantics — an unbound solution is distinct from every bound one and
+  duplicates of it collapse to a single row;
+* ORDER BY sorts UNBOUND last under ASC and first under DESC (SQL
+  NULLS LAST), identically on eager / jit / distributed and the
+  brute-force reference;
+* ``Result.as_multiset`` / ``Result.same_as`` canonicalize
+  UNBOUND-filled columns against missing columns, so backends that drop
+  an all-unbound variable and backends that materialize it compare
+  equal.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import Bindings
+from repro.core.reference import execute_reference
+from repro.core.sparql import parse_sparql
+from repro.engine import Dataset
+from repro.engine.result import Result
+from repro.rdf.dictionary import PAD, UNBOUND, Dictionary
+
+TRIPLES = [
+    ("a1", "p0", "b1"), ("a2", "p0", "b2"), ("a3", "p0", "b3"),
+    ("b1", "p1", "c1"), ("b1", "p1", "c2"),
+]
+OPT_Q = "SELECT * WHERE { ?s p0 ?o OPTIONAL { ?o p1 ?w } }"
+
+
+def _engines(ds):
+    mesh = jax.make_mesh((1,), ("data",))
+    return [("eager", ds.engine("eager")),
+            ("jit", ds.engine("jit")),
+            ("distributed", ds.engine("distributed", mesh=mesh))]
+
+
+# ---------------------------------------------------------------------------
+# Sentinel vs dictionary ids
+# ---------------------------------------------------------------------------
+
+def test_unbound_never_collides_with_dictionary_ids():
+    """Ids are dense non-negative ints; the sentinels live outside that
+    range for any term set — including terms that *look* like the
+    sentinels."""
+    rng = np.random.default_rng(7)
+    corpora = [
+        ["a", "b", "c"],
+        ["-1", "UNBOUND", str(UNBOUND), str(PAD), '"-1"'],
+        [f"e{rng.integers(0, 50)}" for _ in range(200)],
+        [f'"{v}"' for v in rng.normal(size=50)],
+    ]
+    for terms in corpora:
+        d = Dictionary()
+        ids = [d.add(t) for t in terms]
+        assert all(i >= 0 for i in ids)
+        assert UNBOUND not in ids and PAD not in ids
+        assert sorted(set(ids)) == list(range(len(d)))
+    # and the engine-visible sentinel really is the reserved value
+    assert UNBOUND == -1 and UNBOUND < 0 <= PAD
+
+
+def test_unbound_rows_flow_through_optional():
+    ds = Dataset.from_triples(TRIPLES)
+    for name, eng in _engines(ds):
+        res = eng.query(OPT_Q)
+        w = res.data[:, res.cols.index("?w")]
+        assert len(res) == 4, name
+        assert int((w == UNBOUND).sum()) == 2, name   # a2, a3 unmatched
+        assert all(v >= 0 for v in w[w != UNBOUND]), name
+
+
+# ---------------------------------------------------------------------------
+# to_terms / decoding
+# ---------------------------------------------------------------------------
+
+def test_to_terms_omits_unbound_slots():
+    ds = Dataset.from_triples(TRIPLES)
+    rows = ds.engine("jit").query(OPT_Q).to_terms()
+    assert len(rows) == 4
+    for m in rows:
+        assert "?s" in m and "?o" in m
+        assert all(v != "UNBOUND" for v in m.values())
+    unmatched = [m for m in rows if "?w" not in m]
+    assert sorted(m["?s"] for m in unmatched) == ["a2", "a3"]
+
+
+# ---------------------------------------------------------------------------
+# DISTINCT (W3C multiset semantics)
+# ---------------------------------------------------------------------------
+
+def test_distinct_keeps_unbound_as_a_solution():
+    """SELECT DISTINCT ?w: the two unmatched rows collapse into ONE
+    unbound solution which is distinct from every bound ?w."""
+    ds = Dataset.from_triples(TRIPLES)
+    qtext = "SELECT DISTINCT ?w WHERE { ?s p0 ?o OPTIONAL { ?o p1 ?w } }"
+    ref = execute_reference(parse_sparql(qtext, ds.dictionary),
+                            ds.catalog.tt, ds.dictionary.values)
+    assert sorted(m.get("?w", UNBOUND) for m in ref).count(UNBOUND) == 1
+    for name, eng in _engines(ds):
+        res = eng.query(qtext)
+        w = sorted(res.data[:, res.cols.index("?w")].tolist())
+        assert len(w) == 3, name                      # {UNBOUND, c1, c2}
+        assert w.count(UNBOUND) == 1, name
+        assert w == sorted(m.get("?w", UNBOUND) for m in ref), name
+
+
+# ---------------------------------------------------------------------------
+# ORDER BY (NULLS LAST)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("desc", [False, True])
+def test_unbound_sort_position(desc):
+    key = "DESC(?w)" if desc else "?w"
+    qtext = f"SELECT * WHERE {{ ?s p0 ?o OPTIONAL {{ ?o p1 ?w }} }} " \
+            f"ORDER BY {key}"
+    ds = Dataset.from_triples(TRIPLES)
+    ref = execute_reference(parse_sparql(qtext, ds.dictionary),
+                            ds.catalog.tt, ds.dictionary.values)
+    ref_w = [m.get("?w", UNBOUND) for m in ref]
+    rows = []
+    for name, eng in _engines(ds):
+        res = eng.query(qtext)
+        w = res.data[:, res.cols.index("?w")].tolist()
+        bound_zone = w[2:] if desc else w[:2]         # 2 matched rows
+        unbound_zone = w[:2] if desc else w[2:]
+        assert all(v != UNBOUND for v in bound_zone), (name, w)
+        assert all(v == UNBOUND for v in unbound_zone), (name, w)
+        assert [v == UNBOUND for v in w] == \
+            [v == UNBOUND for v in ref_w], (name, w, ref_w)
+        rows.append((name, res.data[:, [res.cols.index(c)
+                                        for c in sorted(res.cols)]]))
+    for name, data in rows[1:]:                       # engines agree rowwise
+        assert np.array_equal(data, rows[0][1]), name
+
+
+# ---------------------------------------------------------------------------
+# Result canonicalization: UNBOUND column vs missing column
+# ---------------------------------------------------------------------------
+
+def test_as_multiset_fills_missing_columns_with_unbound():
+    r = Result(Bindings(("?a",), np.array([[3], [5]], dtype=np.int32)))
+    bag = r.as_multiset(["?a", "?b"])
+    assert bag == {(3, UNBOUND): 1, (5, UNBOUND): 1}
+
+
+def test_same_as_unbound_vs_missing_column():
+    dropped = Result(Bindings(("?a",), np.array([[3], [5]], dtype=np.int32)))
+    filled = Result(Bindings(("?a", "?b"),
+                             np.array([[3, UNBOUND], [5, UNBOUND]],
+                                      dtype=np.int32)))
+    bound = Result(Bindings(("?a", "?b"),
+                            np.array([[3, 9], [5, UNBOUND]],
+                                     dtype=np.int32)))
+    # an all-UNBOUND column and an absent column encode the same mappings
+    assert dropped.same_as(filled) and filled.same_as(dropped)
+    # ... but actual bound values still distinguish results
+    assert not dropped.same_as(bound) and not bound.same_as(filled)
+    # and the relation is symmetric + reflexive on itself
+    assert dropped.same_as(dropped)
