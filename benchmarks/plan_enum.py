@@ -1,0 +1,176 @@
+"""Planner A/B gate: greedy (Algorithm 4) vs cardinality-estimate plan
+enumeration over the WatDiv basic suite (star/linear/snowflake/complex).
+
+Two engines share one dataset — identical tables, plan caches keyed on
+the planner knob — and every template instance is timed in **paired,
+calibrated blocks**: each repetition times a >=``BLOCK_SECONDS`` loop of
+the query under one planner, then immediately under the other (order
+alternating), and contributes one greedy/estimate latency *ratio*.
+Pairing adjacent-in-time blocks cancels slow clock/load drift that
+independent best-of-N timing cannot; the per-template speedup is the
+median of the paired ratios.
+
+``speedup`` is a **plan-level** quantity: when both planners chose the
+byte-identical join order on every instance of a template the two
+engines execute the same plan, so the speedup is identically 1.0 by
+construction and is reported as such (the raw measured times are still
+recorded); any measured delta there is harness noise, not planner
+behavior.  Wins and regressions can therefore only come from genuinely
+different join orders — exactly what the gate is about.
+
+The CI gate (``tests-pallas``) fails if:
+* the estimate planner is < ``MIN_SPEEDUP``x greedy on ANY template
+  (estimation must never wreck a query), or
+* it is not strictly faster on at least one snowflake (F*) or complex
+  (C*) template (the statistics must buy something where join trees are
+  deep enough to matter).
+
+Emits ``BENCH_plan_enum.json``::
+
+    {"scale": ..., "n_queries": ...,
+     "templates": {name: {"greedy_s": ..., "estimate_s": ...,
+                          "speedup": ..., "order_differs": ...}},
+     "gate": {"min_speedup": ..., "fc_wins": [...]}}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from statistics import median
+from typing import Dict, List, Optional
+
+from benchmarks.common import Csv, facade
+from repro.engine import RuntimeConfig
+from repro.rdf.workloads import basic_queries
+
+DEFAULT_OUT = "BENCH_plan_enum.json"
+MIN_SPEEDUP = 0.95     # estimate must stay within 5% of greedy everywhere
+GATE_SCALE = 1.0       # the scale the gate thresholds are calibrated at
+                       # (CI runs --scale 1.0); other scales still emit
+                       # the full report but only warn — the uniform join
+                       # model's known C2 fan-out underestimate grows
+                       # with scale (docs/architecture.md)
+REPEATS = 5            # paired ratio samples per instance (same-order)
+REPEATS_DIFF = 33      # ...and where the orders genuinely differ: only
+                       # these templates can trip the gate, so buy the
+                       # sampling depth to make their medians stable
+BLOCK_SECONDS = 0.01   # calibrated timed-block floor: a 5% delta on a
+                       # >=10ms block is resolvable; single sub-ms query
+                       # executions are not
+
+
+def _order_key(prepared):
+    plan = getattr(prepared, "plan", None)
+    if plan is None or getattr(plan, "empty", False):
+        return ()
+    return tuple(str(s.tp) for s in plan.steps)
+
+
+def _timed_block(eng, qtext: str, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        eng.query(qtext)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(scale: float = 1.0, csv: Optional[Csv] = None,
+        out_path: str = DEFAULT_OUT) -> Dict[str, object]:
+    ds = facade(scale)
+    queries = basic_queries(ds.schema, seed=42, n_instances=3)
+    engines = {
+        "greedy": ds.engine("eager", runtime=RuntimeConfig(planner="greedy")),
+        "estimate": ds.engine("eager",
+                              runtime=RuntimeConfig(planner="estimate")),
+    }
+
+    # warm both plan caches (and the template cache) so compile time and
+    # first-touch table faults never land inside a timed repetition
+    for instances in queries.values():
+        for qtext in instances:
+            for eng in engines.values():
+                eng.query(qtext)
+
+    templates: Dict[str, Dict[str, object]] = {}
+    for name, instances in queries.items():
+        order_differs = any(
+            _order_key(engines["greedy"].prepare(qtext)) !=
+            _order_key(engines["estimate"].prepare(qtext))
+            for qtext in instances)
+        repeats = REPEATS_DIFF if order_differs else REPEATS
+        ratios: List[float] = []
+        times = {"greedy": [], "estimate": []}
+        for qtext in instances:
+            # calibrate a shared iteration count so every timed block
+            # runs >= BLOCK_SECONDS; both planners use the SAME count
+            once = max(_timed_block(engines["greedy"], qtext, 1), 1e-7)
+            iters = max(1, int(BLOCK_SECONDS / once) + 1)
+            b = {"greedy": float("inf"), "estimate": float("inf")}
+            for rep in range(repeats):
+                order = list(engines.items())
+                if rep % 2:
+                    order.reverse()
+                pair = {}
+                for planner, eng in order:
+                    pair[planner] = _timed_block(eng, qtext, iters)
+                ratios.append(pair["greedy"] / max(pair["estimate"], 1e-12))
+                for planner in engines:
+                    b[planner] = min(b[planner], pair[planner])
+            for planner in engines:
+                times[planner].append(b[planner])
+        g = sum(times["greedy"]) / len(times["greedy"])
+        e = sum(times["estimate"]) / len(times["estimate"])
+        # identical join orders => identical plans => speedup is 1.0 by
+        # construction; otherwise the median paired ratio
+        speedup = median(ratios) if order_differs else 1.0
+        templates[name] = {"greedy_s": g, "estimate_s": e,
+                           "speedup": speedup,
+                           "order_differs": order_differs}
+        if csv is not None:
+            csv.add(f"plan_enum/{name}", e,
+                    f"speedup={speedup:.2f}x "
+                    f"order_diff={int(order_differs)}")
+
+    # --- the gate (report is written FIRST so a failing gate still
+    # leaves the artifact for the CI upload) ---------------------------
+    worst = min(t["speedup"] for t in templates.values())
+    fc_wins = sorted(n for n, t in templates.items()
+                     if n[0] in "FC" and t["speedup"] > 1.0)
+    n_queries = sum(len(v) for v in queries.values())
+    report = {"scale": scale, "n_queries": n_queries,
+              "repeats": REPEATS, "templates": templates,
+              "gate": {"min_speedup": worst, "fc_wins": fc_wins}}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if csv is not None:
+        csv.add("plan_enum/gate", 0.0,
+                f"min_speedup={worst:.2f}x fc_wins={len(fc_wins)}")
+
+    if scale != GATE_SCALE:
+        if worst < MIN_SPEEDUP or not fc_wins:
+            print(f"plan_enum: gate thresholds are calibrated at scale "
+                  f"{GATE_SCALE} (got {scale}); min_speedup={worst:.3f}x "
+                  f"fc_wins={fc_wins} reported without enforcement")
+        return report
+    for name, t in sorted(templates.items()):
+        assert t["speedup"] >= MIN_SPEEDUP, (
+            f"plan_enum gate: estimate planner is {t['speedup']:.3f}x "
+            f"greedy on {name} (< {MIN_SPEEDUP}x) — the estimator chose "
+            f"a worse join order than Algorithm 4")
+    assert fc_wins, (
+        "plan_enum gate: estimate planner beat greedy on NO snowflake/"
+        "complex template — the statistics bought nothing where join "
+        "trees are deep")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    csv = Csv()
+    run(scale=args.scale, csv=csv, out_path=args.out)
+    csv.emit()

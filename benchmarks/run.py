@@ -13,8 +13,8 @@ from __future__ import annotations
 import argparse
 
 from benchmarks import adaptive_routing, common, modifier_queries, \
-    sec74_threshold, serve_throughput, store_load, table2_load, table3_st, \
-    table4_basic, table5_il
+    plan_enum, sec74_threshold, serve_throughput, store_load, table2_load, \
+    table3_st, table4_basic, table5_il
 from benchmarks.common import Csv
 
 TABLES = {
@@ -27,6 +27,7 @@ TABLES = {
     "modifiers": modifier_queries.run,  # writes BENCH_modifier_queries.json
     "store": store_load.run,         # writes BENCH_store_load.json
     "routing": adaptive_routing.run,  # writes BENCH_adaptive_routing.json
+    "plan_enum": plan_enum.run,      # writes BENCH_plan_enum.json
 }
 
 

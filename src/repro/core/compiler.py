@@ -61,6 +61,11 @@ class Plan:
     steps: List[ScanStep] = field(default_factory=list)
     empty: bool = False          # statistics-proven empty result
     vars: Tuple[str, ...] = ()
+    #: which join-order planner produced ``steps``: "greedy" (Algorithm 4)
+    #: or "estimate" (cardinality-estimate enumeration).  A requested
+    #: "estimate" that fell back (no distinct-count statistics) records
+    #: "greedy" — the field reports what actually ran.
+    planner: str = "greedy"
 
     def describe(self) -> str:
         if self.empty:
@@ -114,8 +119,21 @@ def _emptiness(tp: TriplePattern) -> bool:
                for t in (tp.s, tp.p, tp.o))
 
 
-def compile_bgp(bgp: BGP, catalog: Catalog, layout: str = "extvp") -> Plan:
-    """Algorithm 4 (BGP2SQL_OPT): table selection + join ordering."""
+def compile_bgp(bgp: BGP, catalog: Catalog, layout: str = "extvp",
+                planner: str = "greedy") -> Plan:
+    """Algorithm 4 (BGP2SQL_OPT): table selection + join ordering.
+
+    ``planner`` selects the join-order strategy: ``"greedy"`` is the
+    paper's (#bound values, table size) order; ``"estimate"`` runs the
+    bounded cardinality-estimate enumerator (:mod:`repro.core.estimate`)
+    over the same selected tables — emptiness short-circuits and table
+    selection are planner-invariant, only the step order changes.  An
+    estimate request silently falls back to greedy when the catalog has
+    no distinct-count statistics (e.g. a version-1 store).
+    """
+    if planner not in ("greedy", "estimate"):
+        raise ValueError(
+            f"unknown planner {planner!r}; expected 'greedy' or 'estimate'")
     patterns = list(bgp.patterns)
     if not patterns:
         return Plan(steps=[], vars=())
@@ -128,6 +146,14 @@ def compile_bgp(bgp: BGP, catalog: Catalog, layout: str = "extvp") -> Plan:
                 for tp in patterns}
     if any(s.sf == 0.0 for s in selected.values()):
         return Plan(empty=True, vars=bgp.vars())
+
+    if planner == "estimate":
+        from repro.core import estimate as _estimate
+        enumerated = _estimate.order_steps(
+            [selected[id(tp)] for tp in patterns], catalog)
+        if enumerated is not None:
+            return Plan(steps=enumerated, vars=bgp.vars(),
+                        planner="estimate")
 
     # Join ordering.  Paper: order by #bound values first, then repeatedly
     # pick the smallest-table pattern that is join-connected to the bound
@@ -268,7 +294,7 @@ def core_filter_exprs(seg: CoreSeg) -> List[FilterExpr]:
 
 
 def compile_core(node: Node, catalog: Catalog,
-                 layout: str = "extvp") -> CorePlan:
+                 layout: str = "extvp", planner: str = "greedy") -> CorePlan:
     """Compile a graph-pattern tree into a :class:`CorePlan`.
 
     Two phases: (1) bottom-up build with emptiness pruning — a
@@ -285,7 +311,7 @@ def compile_core(node: Node, catalog: Catalog,
 
     def build(n: Node) -> CoreSeg:
         if isinstance(n, BGP):
-            plan = compile_bgp(n, catalog, layout)
+            plan = compile_bgp(n, catalog, layout, planner)
             if plan.empty:
                 return EmptySeg(vars=plan.vars)
             return BGPSeg(plan=plan)
@@ -335,5 +361,16 @@ def compile_core(node: Node, catalog: Catalog,
 
     assign(root)
     empty = isinstance(root, EmptySeg)
-    flat = Plan(steps=flat_steps, empty=empty, vars=seg_vars(root))
+
+    def used(seg: CoreSeg) -> bool:
+        if isinstance(seg, BGPSeg):
+            return seg.plan.planner == "estimate"
+        if isinstance(seg, FilterSeg):
+            return used(seg.child)
+        if isinstance(seg, CombineSeg):
+            return used(seg.left) or used(seg.right)
+        return False
+
+    flat = Plan(steps=flat_steps, empty=empty, vars=seg_vars(root),
+                planner="estimate" if used(root) else "greedy")
     return CorePlan(root=root, flat=flat, empty=empty, vars=flat.vars)

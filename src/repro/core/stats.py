@@ -26,7 +26,8 @@ import numpy as np
 from repro.core.table import Table
 from repro.core.vp import ExtVPBuild, build_extvp, build_vp, KINDS
 
-__all__ = ["Catalog", "build_catalog"]
+__all__ = ["Catalog", "build_catalog", "compute_distinct_counts",
+           "compute_second_moments"]
 
 Key = Tuple[str, int, int]
 
@@ -51,6 +52,23 @@ class Catalog:
     vp_build_seconds: float = 0.0
     with_extvp: bool = True             # False: VP-only store (no pair stats)
     store: object = None                # Optional[repro.store.StoreInfo]
+    #: per-predicate distinct-subject / distinct-object counts over the VP
+    #: tables — the join-selectivity statistics the cardinality estimator
+    #: (:mod:`repro.core.estimate`) consumes.  ``None`` on catalogs that
+    #: predate them (e.g. version-1 stores): the estimate planner then
+    #: falls back to the Algorithm-4 greedy order.  Persisted in the store
+    #: manifest, so lazily loaded catalogs answer without materializing a
+    #: single table.
+    distinct_s: Optional[Dict[int, int]] = None
+    distinct_o: Optional[Dict[int, int]] = None
+    #: per-predicate second moments of the subject/object frequency
+    #: distributions (Σ per-value-count², the self-join size).  m2/|VP|
+    #: is the expected number of rows matching a constant drawn from the
+    #: data distribution — robust to value skew (rdf:type!) where the
+    #: uniform |VP|/distinct estimate collapses.  Optional refinement on
+    #: top of the distinct counts; absent on older stores.
+    m2_s: Optional[Dict[int, int]] = None
+    m2_o: Optional[Dict[int, int]] = None
 
     # ---- statistics API (what Algorithms 1 & 4 consume) --------------------
     def sf(self, kind: str, p1: int, p2: int) -> float:
@@ -69,6 +87,37 @@ class Catalog:
 
     def vp_size(self, p: int) -> int:
         return len(self.vp[p]) if p in self.vp else 0
+
+    @property
+    def has_distinct_stats(self) -> bool:
+        """True when per-predicate distinct counts are available (the
+        estimate planner's enabling condition)."""
+        return bool(self.distinct_s) and bool(self.distinct_o)
+
+    def distinct(self, p: int) -> Optional[Tuple[int, int]]:
+        """(distinct subjects, distinct objects) of VP_p, or ``None`` when
+        the statistics are absent (old store) or the predicate is unknown."""
+        if not self.distinct_s or not self.distinct_o:
+            return None
+        p = int(p)
+        ds = self.distinct_s.get(p)
+        do = self.distinct_o.get(p)
+        if ds is None or do is None:
+            return None
+        return ds, do
+
+    def second_moment(self, p: int) -> Optional[Tuple[int, int]]:
+        """(Σ subject-count², Σ object-count²) of VP_p, or ``None`` when
+        the skew statistics are absent — the estimator then assumes a
+        uniform value distribution (``size / distinct``)."""
+        if not self.m2_s or not self.m2_o:
+            return None
+        p = int(p)
+        ms = self.m2_s.get(p)
+        mo = self.m2_o.get(p)
+        if ms is None or mo is None:
+            return None
+        return ms, mo
 
     # ---- table access -------------------------------------------------------
     def table(self, kind: Optional[str], p1: int, p2: Optional[int] = None) -> Optional[Table]:
@@ -121,6 +170,32 @@ class Catalog:
         }
 
 
+def compute_distinct_counts(
+    vp: Mapping[int, Table],
+) -> Tuple[Dict[int, int], Dict[int, int]]:
+    """Per-predicate distinct-subject / distinct-object counts over a VP
+    catalog — one sorted-unique pass per table (the tables' cached
+    ``unique_s`` / ``unique_o`` views, which joins reuse later anyway)."""
+    distinct_s = {int(p): int(len(t.unique_s)) for p, t in vp.items()}
+    distinct_o = {int(p): int(len(t.unique_o)) for p, t in vp.items()}
+    return distinct_s, distinct_o
+
+
+def _m2(col: np.ndarray) -> int:
+    counts = np.unique(np.asarray(col), return_counts=True)[1]
+    return int((counts.astype(np.int64) ** 2).sum())
+
+
+def compute_second_moments(
+    vp: Mapping[int, Table],
+) -> Tuple[Dict[int, int], Dict[int, int]]:
+    """Per-predicate Σcount² over each VP column — the self-join sizes
+    the estimator uses as skew-robust bound-term selectivities."""
+    m2_s = {int(p): _m2(t.rows[:, 0]) for p, t in vp.items()}
+    m2_o = {int(p): _m2(t.rows[:, 1]) for p, t in vp.items()}
+    return m2_s, m2_o
+
+
 def build_catalog(
     tt: np.ndarray,
     dictionary=None,
@@ -139,6 +214,8 @@ def build_catalog(
     """
     t0 = time.perf_counter()
     vp = build_vp(tt)
+    distinct_s, distinct_o = compute_distinct_counts(vp)
+    m2_s, m2_o = compute_second_moments(vp)
     vp_secs = time.perf_counter() - t0
     if with_extvp:
         ext = build_extvp(vp, threshold=threshold, kinds=kinds,
@@ -148,4 +225,6 @@ def build_catalog(
         ext = ExtVPBuild(threshold=threshold, kinds=tuple(kinds))
     return Catalog(tt=np.asarray(tt, dtype=np.int32), vp=vp, extvp=ext,
                    dictionary=dictionary, vp_build_seconds=vp_secs,
-                   with_extvp=with_extvp)
+                   with_extvp=with_extvp,
+                   distinct_s=distinct_s, distinct_o=distinct_o,
+                   m2_s=m2_s, m2_o=m2_o)

@@ -59,6 +59,10 @@ class ExecutionContext:
     dictionary: object = None            # Optional[repro.rdf.Dictionary]
     layout: str = "extvp"
     mesh: object = None                  # Optional[jax.sharding.Mesh]
+    #: join-order planner compiled plans use ("greedy" | "estimate");
+    #: the Engine refreshes this from its RuntimeConfig before every
+    #: prepare, and keys its plan cache on it
+    planner: str = "greedy"
 
 
 class PreparedQuery:
@@ -137,7 +141,8 @@ class _EagerPrepared(PreparedQuery):
         self.spine = None
         core, spine = peel_spine(self.query)
         if isinstance(core, BGP) and ctx.layout != "pt":
-            self.plan = compile_bgp(core, ctx.catalog, ctx.layout)
+            self.plan = compile_bgp(core, ctx.catalog, ctx.layout,
+                                    ctx.planner)
             self.spine = spine
 
     def run(self, binding: Optional[ConstantBinding] = None) -> Result:
@@ -277,7 +282,7 @@ class JitBackend(ExecutionBackend):
         core, spine = peel_spine(template.query)
         from repro.core.jexec import PlanExecutor
         try:
-            cp = compile_core(core, ctx.catalog, ctx.layout)
+            cp = compile_core(core, ctx.catalog, ctx.layout, ctx.planner)
             if cp.empty:
                 return _EmptyPrepared(template, ctx, self.name)
             ex = PlanExecutor(cp, ctx.catalog, spine=spine)
@@ -300,7 +305,7 @@ class DistributedBackend(ExecutionBackend):
         core, spine = peel_spine(template.query)
         from repro.core.distributed import DistributedExecutor
         try:
-            cp = compile_core(core, ctx.catalog, ctx.layout)
+            cp = compile_core(core, ctx.catalog, ctx.layout, ctx.planner)
             if cp.empty:
                 return _EmptyPrepared(template, ctx, self.name)
             ex = DistributedExecutor(cp, ctx.catalog, ctx.mesh,

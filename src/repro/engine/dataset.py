@@ -161,6 +161,22 @@ class Dataset:
             if p in vp:
                 rows = np.concatenate([vp[p].rows, rows])
             vp[p] = Table.from_unsorted(rows)
+        # distinct-count statistics: recompute only the touched predicates
+        # (their tables are materialized above anyway); catalogs without
+        # the stats (version-1 stores) stay without them — back-filling
+        # would force-load every lazy table
+        distinct_s = distinct_o = m2_s = m2_o = None
+        if cat.distinct_s is not None and cat.distinct_o is not None:
+            distinct_s, distinct_o = dict(cat.distinct_s), dict(cat.distinct_o)
+            for p in touched:
+                distinct_s[p] = int(len(vp[p].unique_s))
+                distinct_o[p] = int(len(vp[p].unique_o))
+        if cat.m2_s is not None and cat.m2_o is not None:
+            from repro.core.stats import _m2
+            m2_s, m2_o = dict(cat.m2_s), dict(cat.m2_o)
+            for p in touched:
+                m2_s[p] = _m2(vp[p].rows[:, 0])
+                m2_o[p] = _m2(vp[p].rows[:, 1])
         vp_secs = cat.vp_build_seconds + (time.perf_counter() - t0)
 
         # A store built with with_extvp=False has no pair statistics to
@@ -182,7 +198,9 @@ class Dataset:
                                dictionary=self.dictionary,
                                vp_build_seconds=vp_secs,
                                with_extvp=cat.with_extvp,
-                               store=cat.store)
+                               store=cat.store,
+                               distinct_s=distinct_s, distinct_o=distinct_o,
+                               m2_s=m2_s, m2_o=m2_o)
         self._engines.clear()
         self.last_append_report = report
         if journal and self.store_path is not None:

@@ -203,7 +203,8 @@ class Engine:
         self.layout = layout
         self.ctx = ExecutionContext(catalog=dataset.catalog,
                                     dictionary=dataset.dictionary,
-                                    layout=layout, mesh=mesh)
+                                    layout=layout, mesh=mesh,
+                                    planner=self._planner)
         self.cache = PlanCache(plan_cache_size)
         self.metrics = ServerMetrics()
         self.metrics.runtime_report_fn = self.runtime_report
@@ -228,12 +229,23 @@ class Engine:
         """The sole backend of a static engine (back-compat accessor)."""
         return next(iter(self._backends.values()))
 
+    @property
+    def _planner(self) -> str:
+        """The live planner knob — read from the RuntimeConfig on every
+        use so flipping ``config.planner`` mid-session takes effect (the
+        plan-cache key includes it, so stale orders cannot be served)."""
+        return getattr(self.config, "planner", "greedy")
+
     # -- compilation ----------------------------------------------------------
     def _cache_key(self, bname: str, sig: str) -> str:
         # static engines keep the bare signature as the key (the public,
         # documented cache shape); auto engines hold one prepared query
-        # per (backend, signature)
-        return sig if not self.auto else f"{bname}::{sig}"
+        # per (backend, signature).  A non-default planner prefixes the
+        # key: plans compiled under different join-order planners are
+        # different artifacts and must never shadow each other.
+        key = sig if not self.auto else f"{bname}::{sig}"
+        planner = self._planner
+        return key if planner == "greedy" else f"planner={planner}::{key}"
 
     def _lookup(self, bname: str, qtext: str, sig: str
                 ) -> Optional[PreparedQuery]:
@@ -246,6 +258,7 @@ class Engine:
         return self.cache.get(self._cache_key(bname, "=" + _normalize(qtext)))
 
     def _build(self, bname: str, qtext: str, sig: str) -> PreparedQuery:
+        self.ctx.planner = self._planner
         try:
             template = QueryTemplate(qtext, self.ctx.dictionary)
         except ValueError:
@@ -315,15 +328,19 @@ class Engine:
             return decision, prepared
 
     def explain(self, qtext: str) -> str:
-        """The compiled plan of ``qtext``'s template plus the routing
-        decision it would get right now and why (``forced`` on a static
-        engine, ``warmup``/``measured``/``probe`` under ``auto``) —
-        diagnostics, consumes no routing budget."""
+        """The compiled plan of ``qtext``'s template plus (for flat BGP
+        cores) per-step estimated vs. actual intermediate cardinalities,
+        which join-order planner produced the plan, and the routing
+        decision the request would get right now and why (``forced`` on a
+        static engine, ``warmup``/``measured``/``probe`` under ``auto``)
+        — diagnostics, consumes no routing budget (the actual column does
+        execute the pipeline's joins on the host)."""
         sig = template_signature(qtext)
         decision, prepared = self._route(qtext, sig, counted=False,
                                          peek=True)
         plan = getattr(prepared, "plan", None)
         lines = [plan.describe() if plan is not None else "(operator tree)"]
+        lines.extend(self._explain_cardinalities(prepared, qtext, plan))
         st = self.router.report()["signatures"].get(sig, {})
         ewma = st.get("ewma_ms", {})
         detail = ", ".join(f"{b}={ewma[b]:.3f}ms" for b in sorted(ewma))
@@ -333,6 +350,50 @@ class Engine:
             lines.append("note: prepared as an eager fallback "
                          "(device path cannot express this template)")
         return "\n".join(lines)
+
+    def _explain_cardinalities(self, prepared: PreparedQuery, qtext: str,
+                               plan) -> List[str]:
+        """Estimated-vs-actual per-step cardinality lines for flat BGP
+        pipelines (sequentially joining the flat steps of an
+        OPTIONAL/UNION tree would misstate its semantics, so those only
+        report the winning planner)."""
+        from repro.core.algebra import BGP
+        from repro.core.modifiers import peel_spine
+        from repro.engine.template import rebind_plan
+
+        if plan is None:
+            return []
+        requested = self._planner
+        out = [f"planner: {plan.planner} (requested {requested})"
+               if plan.planner != requested else f"planner: {plan.planner}"]
+        if plan.empty or not plan.steps:
+            return out
+        core, _ = peel_spine(prepared.template.query)
+        if not isinstance(core, BGP):
+            return out
+        concrete = plan
+        if prepared.template.rebindable:
+            binding = prepared.template.binding_for(qtext)
+            if binding.missing:
+                out.append("cardinalities: skipped (constant absent from "
+                           "the dictionary; answered from statistics)")
+                return out
+            concrete = rebind_plan(plan, binding.mapping)
+
+        from repro.core import estimate as _estimate
+        ests = _estimate.estimate_order(concrete.steps, self.ctx.catalog)
+        actuals = _estimate.actual_cardinalities(concrete.steps,
+                                                 self.ctx.catalog)
+        if ests is None:
+            out.append("cardinalities: estimates unavailable (catalog has "
+                       "no distinct-count statistics)")
+            ests = [None] * len(concrete.steps)
+        for i, (step, est, act) in enumerate(
+                zip(concrete.steps, ests, actuals)):
+            shown = "?" if est is None else f"{est.rows:.1f}"
+            out.append(f"  step {i}: {step.describe()} "
+                       f"est={shown} actual={act}")
+        return out
 
     # -- execution ------------------------------------------------------------
     def _record(self, prepared: PreparedQuery, binding, res: Result) -> None:
@@ -459,6 +520,7 @@ class Engine:
         return {
             "backend": self.backend,
             "auto": self.auto,
+            "planner": self._planner,
             "router": self.router.report(),
             "tuner": self.tuner.report(),
             "config": self.config.snapshot(),

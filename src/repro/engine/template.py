@@ -268,7 +268,8 @@ def rebind_plan(plan: Plan, mapping: Dict[int, int]) -> Plan:
         return plan
     steps = [ScanStep(_sub_tp(s.tp, mapping), s.kind, s.p2, s.sf, s.size,
                       s.uses_tt) for s in plan.steps]
-    return Plan(steps=steps, empty=plan.empty, vars=plan.vars)
+    return Plan(steps=steps, empty=plan.empty, vars=plan.vars,
+                planner=plan.planner)
 
 
 def iter_patterns(node: Node) -> Iterator[TriplePattern]:

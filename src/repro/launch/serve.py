@@ -44,11 +44,13 @@ def serve_sparql(args) -> None:
                   f"{time.perf_counter() - t0:.3f}s "
                   "(next boot loads it without rebuilding)")
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    runtime = None
+    rt_kwargs = {}
     if args.batch_shapes:
-        shapes = tuple(int(t) for t in
-                       args.batch_shapes.replace(",", " ").split())
-        runtime = RuntimeConfig(batch_shapes=shapes)
+        rt_kwargs["batch_shapes"] = tuple(
+            int(t) for t in args.batch_shapes.replace(",", " ").split())
+    if args.planner:
+        rt_kwargs["planner"] = args.planner
+    runtime = RuntimeConfig(**rt_kwargs) if rt_kwargs else None
     # "auto" routes per template across eager/jit (add --backend
     # distributed explicitly to pin the sharded path to a mesh)
     engine = ds.engine(args.backend,
@@ -97,6 +99,11 @@ def main() -> None:
                          "distributed) or 'auto' for per-template adaptive "
                          "routing (docs/serving.md)")
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--planner", default=None,
+                    choices=["greedy", "estimate"],
+                    help="join-order planner (default: REPRO_RT_PLANNER "
+                         "env or 'greedy'); 'estimate' enumerates orders "
+                         "by estimated intermediate cardinality")
     ap.add_argument("--batch-shapes", default=None,
                     help="comma-separated micro-batch bucket menu, e.g. "
                          "1,4,16 (default REPRO_RT_BATCH_SHAPES or "

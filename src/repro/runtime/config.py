@@ -27,6 +27,10 @@ from typing import Callable, Dict, Tuple
 __all__ = ["RuntimeConfig", "runtime_config"]
 
 
+def _env_str(name: str, default: str) -> str:
+    return os.environ.get(name, default)
+
+
 def _env_int(name: str, default: int) -> int:
     return int(os.environ.get(name, default))
 
@@ -76,6 +80,15 @@ class RuntimeConfig:
         # exclusions (prepare raised) stay permanent.  0 disables.
         self.router_readmit_every = _env_int("REPRO_RT_READMIT_EVERY", 512)
 
+        ######## Query planner ########
+        # join-order planner: "greedy" is the paper's Algorithm 4
+        # (#bound values, table size); "estimate" enumerates orders by
+        # estimated intermediate cardinality (repro.core.estimate) and
+        # falls back to greedy on catalogs without distinct-count
+        # statistics.  Part of the Engine's plan-cache key, so flipping
+        # it mid-session re-plans instead of serving a stale order.
+        self.planner = _env_str("REPRO_RT_PLANNER", "greedy")
+
         ######## Batch-shape tuner ########
         # launches a bucket needs before it can be retired (or retire
         # a rival); compile-discard launches do not count
@@ -109,6 +122,10 @@ class RuntimeConfig:
                                                  for s in self.batch_shapes)))
         if not self.batch_shapes or min(self.batch_shapes) < 1:
             raise ValueError("batch_shapes must be positive ints")
+        if self.planner not in ("greedy", "estimate"):
+            raise ValueError(
+                f"planner must be 'greedy' or 'estimate', "
+                f"got {self.planner!r}")
 
     def snapshot(self) -> Dict[str, object]:
         """JSON-friendly view of every knob (for ``runtime_report()``)."""

@@ -34,7 +34,8 @@ from typing import Dict, Tuple
 import numpy as np
 
 __all__ = [
-    "FORMAT_NAME", "FORMAT_VERSION", "MANIFEST_NAME", "INT_DTYPE",
+    "FORMAT_NAME", "FORMAT_VERSION", "SUPPORTED_VERSIONS", "MANIFEST_NAME",
+    "INT_DTYPE",
     "VAL_DTYPE", "CHUNK_BYTES", "StoreError", "StoreFormatError",
     "StoreChecksumError", "key_to_str", "str_to_key", "table_filename",
     "crc32", "crc32_file", "load_manifest", "manifest_path", "is_store",
@@ -42,7 +43,12 @@ __all__ = [
 ]
 
 FORMAT_NAME = "s2rdf-columnar-store"
-FORMAT_VERSION = 1
+#: version 2 added the per-predicate distinct-subject/object counts
+#: ("distinct" manifest section) that feed the cardinality estimator;
+#: version-1 stores still load — they just carry no distinct statistics,
+#: so the estimate planner falls back to the greedy order.
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 MANIFEST_NAME = "manifest.json"
 
 #: every table column file is raw little-endian int32; the numeric-literal
@@ -145,10 +151,10 @@ def load_manifest(path: str) -> Dict:
         raise StoreFormatError(
             f"{mpath!r} is not a {FORMAT_NAME} manifest "
             f"(format={manifest.get('format') if isinstance(manifest, dict) else None!r})")
-    if manifest.get("version") != FORMAT_VERSION:
+    if manifest.get("version") not in SUPPORTED_VERSIONS:
         raise StoreFormatError(
             f"unsupported store version {manifest.get('version')!r} "
-            f"(this reader speaks version {FORMAT_VERSION})")
+            f"(this reader speaks versions {SUPPORTED_VERSIONS})")
     missing = [k for k in _REQUIRED_TOP if k not in manifest]
     if missing:
         raise StoreFormatError(f"manifest {mpath!r} missing sections: {missing}")

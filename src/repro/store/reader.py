@@ -169,6 +169,20 @@ def load_catalog(path: str, eager: bool = False, verify: bool = False
         vp.materialize_all()
         ext_tables.materialize_all()
 
+    # distinct-count statistics (format version 2; absent in version-1
+    # manifests — the catalog then reports has_distinct_stats=False and
+    # the estimate planner falls back to greedy).  Served straight from
+    # the manifest: planning never touches a column file.
+    distinct = manifest.get("distinct")
+    distinct_s = distinct_o = m2_s = m2_o = None
+    if isinstance(distinct, dict) and "s" in distinct and "o" in distinct:
+        distinct_s = {int(p): int(v) for p, v in distinct["s"].items()}
+        distinct_o = {int(p): int(v) for p, v in distinct["o"].items()}
+        if "s2" in distinct and "o2" in distinct:
+            # skew (second-moment) statistics — optional within v2
+            m2_s = {int(p): int(v) for p, v in distinct["s2"].items()}
+            m2_o = {int(p): int(v) for p, v in distinct["o2"].items()}
+
     from repro.store.delta import delta_stats
     n_delta, _ = delta_stats(path)
     info = StoreInfo(path=path,
@@ -177,5 +191,6 @@ def load_catalog(path: str, eager: bool = False, verify: bool = False
     cat = Catalog(tt=tt, vp=vp, extvp=ext, dictionary=dictionary,
                   vp_build_seconds=float(stats.get("vp_build_seconds", 0.0)),
                   with_extvp=bool(manifest["with_extvp"]),
-                  store=info)
+                  store=info, distinct_s=distinct_s, distinct_o=distinct_o,
+                  m2_s=m2_s, m2_o=m2_o)
     return cat, dictionary

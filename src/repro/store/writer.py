@@ -136,6 +136,24 @@ def write_store(catalog, dictionary, path: str,
     manifest["sizes"] = {key_to_str(k): int(v)
                          for k, v in sorted(ext.sizes.items())}
 
+    # per-predicate distinct-subject/object counts (format version 2):
+    # the cardinality estimator's join-selectivity statistics, served
+    # from the manifest so lazy loads never materialize a table to plan
+    if catalog.distinct_s is not None and catalog.distinct_o is not None:
+        manifest["distinct"] = {
+            "s": {str(int(p)): int(v)
+                  for p, v in sorted(catalog.distinct_s.items())},
+            "o": {str(int(p)): int(v)
+                  for p, v in sorted(catalog.distinct_o.items())},
+        }
+        # frequency second moments (skew statistics) ride along when the
+        # catalog has them — optional even within format version 2
+        if catalog.m2_s is not None and catalog.m2_o is not None:
+            manifest["distinct"]["s2"] = {
+                str(int(p)): int(v) for p, v in sorted(catalog.m2_s.items())}
+            manifest["distinct"]["o2"] = {
+                str(int(p)): int(v) for p, v in sorted(catalog.m2_o.items())}
+
     _prune_stale(os.path.join(path, "vp"),
                  {os.path.basename(e["file"]) for e in vp_entries.values()})
     _prune_stale(os.path.join(path, "extvp"),

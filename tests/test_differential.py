@@ -16,7 +16,13 @@ Comparison rules:
   stable tie-breaking;
 * the device backends must answer the whole corpus — OPTIONAL, UNION,
   unbound predicates, and every modifier spine — with
-  ``device_fallbacks == 0``.
+  ``device_fallbacks == 0``;
+* **order invariance**: every query also executes under the
+  cardinality-estimate planner (``planner="estimate"``) on all three
+  backends — any enumerated join order must be row-for-row equivalent to
+  eager under the same planner, multiset-equivalent to the Algorithm-4
+  greedy order, and must stay on the device path
+  (``device_fallbacks == 0``).
 
 This systematically sweeps the backend × τ × catalog-build surface that
 hand-picked queries cannot cover; it runs under ``_hypothesis_shim``
@@ -33,9 +39,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.reference import execute_reference, mappings_to_multiset
 from repro.core.sparql import parse_sparql
-from repro.engine import Dataset
+from repro.engine import Dataset, RuntimeConfig
 
 TAUS = (0.25, 1.0)
+PLANNERS = ("greedy", "estimate")
 _SLICE_RE = re.compile(r"\s(?:LIMIT|OFFSET)\s+\d+")
 
 
@@ -141,6 +148,19 @@ def assert_rows_equal(a, b, ctx):
     assert np.array_equal(da, db), (ctx, da, db)
 
 
+def assert_multiset_equal(a, b, qtext, ctx):
+    """Cross-planner fence: different join orders may produce different
+    row orders, but the bags must agree.  Sliced queries are exempt (with
+    ties, SPARQL does not pin which equal-key rows survive the cut — the
+    oracle check already pins their count and pre-slice bag)."""
+    if _SLICE_RE.search(qtext):
+        assert len(a) == len(b), (ctx, qtext)
+        return
+    cols = sorted(a.cols)
+    assert dict(a.as_multiset(cols)) == dict(b.as_multiset(cols)), \
+        (ctx, qtext)
+
+
 # ---------------------------------------------------------------------------
 # The differential sweep
 # ---------------------------------------------------------------------------
@@ -164,12 +184,21 @@ def test_backends_match_reference(data):
     d = ds_np.dictionary
     tt = ds_np.catalog.tt
     mesh = jax.make_mesh((1,), ("data",))
+    est = RuntimeConfig(planner="estimate")
     engines = [
         ("eager/numpy-built", ds_np.engine("eager")),
         ("jit/numpy-built", ds_np.engine("jit")),
         ("distributed/numpy-built", ds_np.engine("distributed", mesh=mesh)),
         ("eager/jax-built", ds_jx.engine("eager")),
+        # the order-invariance fence: the SAME catalog under the
+        # cardinality-estimate planner, on every backend
+        ("eager/est-planner", ds_np.engine("eager", runtime=est)),
+        ("jit/est-planner", ds_np.engine("jit", runtime=est)),
+        ("dist/est-planner",
+         ds_np.engine("distributed", mesh=mesh, runtime=est)),
     ]
+    device_engines = [n for n, _ in engines
+                      if n.split("/")[0] in ("jit", "dist", "distributed")]
     for qi in range(3):
         qtext = random_query(rng, n_ent, n_preds)
         results = {}
@@ -178,17 +207,29 @@ def test_backends_match_reference(data):
             results[name] = res
             assert_matches_oracle(res, qtext, d, tt,
                                   (seed, tau, name, qi))
-        # the device pipelines must reproduce eager row-for-row
+        # the device pipelines must reproduce eager row-for-row — under
+        # each planner separately (the planners may order rows apart)
         assert_rows_equal(results["jit/numpy-built"],
                           results["eager/numpy-built"],
                           (seed, tau, "jit-vs-eager", qtext))
         assert_rows_equal(results["distributed/numpy-built"],
                           results["eager/numpy-built"],
                           (seed, tau, "dist-vs-eager", qtext))
+        assert_rows_equal(results["jit/est-planner"],
+                          results["eager/est-planner"],
+                          (seed, tau, "jit-vs-eager/est", qtext))
+        assert_rows_equal(results["dist/est-planner"],
+                          results["eager/est-planner"],
+                          (seed, tau, "dist-vs-eager/est", qtext))
+        # and the enumerated order must be bag-equal to Algorithm 4
+        assert_multiset_equal(results["eager/est-planner"],
+                              results["eager/numpy-built"], qtext,
+                              (seed, tau, "est-vs-greedy"))
     # every fuzzed query — OPTIONAL / UNION / unbound predicates and all
-    # modifier spines included — compiled onto the device path
+    # modifier spines included — compiled onto the device path, under
+    # BOTH planners
     for name, eng in engines:
-        if "eager" not in name:
+        if name in device_engines:
             assert eng.metrics.device_fallbacks == 0, (seed, tau, name)
 
 
@@ -239,18 +280,29 @@ def test_differential_fixed_seed_regressions():
         ds = Dataset.from_triples(triples, threshold=tau,
                                   build_backend="jax")
         d, tt = ds.dictionary, ds.catalog.tt
+        # one engine set per planner over the SAME dataset: the whole
+        # corpus must hold under the Algorithm-4 greedy order AND any
+        # enumerated cardinality-estimate order, on every backend
+        runtimes = {"greedy": None,
+                    "estimate": RuntimeConfig(planner="estimate")}
         for qtext in queries:
-            per_backend = {}
-            for backend in ("eager", "jit", "distributed"):
-                eng = ds.engine(backend, mesh=mesh)
-                res = eng.query(qtext)
-                per_backend[backend] = res
-                assert_matches_oracle(res, qtext, d, tt, (tau, backend))
-                if backend != "eager":
-                    assert eng.metrics.device_fallbacks == 0, \
-                        (tau, backend, qtext)
-            assert_rows_equal(per_backend["jit"], per_backend["eager"],
-                              (tau, "jit-vs-eager", qtext))
-            assert_rows_equal(per_backend["distributed"],
-                              per_backend["eager"],
-                              (tau, "dist-vs-eager", qtext))
+            per = {}
+            for pname, cfg in runtimes.items():
+                for backend in ("eager", "jit", "distributed"):
+                    eng = ds.engine(backend, mesh=mesh, runtime=cfg)
+                    res = eng.query(qtext)
+                    per[(pname, backend)] = res
+                    assert_matches_oracle(res, qtext, d, tt,
+                                          (tau, pname, backend))
+                    if backend != "eager":
+                        assert eng.metrics.device_fallbacks == 0, \
+                            (tau, pname, backend, qtext)
+                assert_rows_equal(per[(pname, "jit")],
+                                  per[(pname, "eager")],
+                                  (tau, pname, "jit-vs-eager", qtext))
+                assert_rows_equal(per[(pname, "distributed")],
+                                  per[(pname, "eager")],
+                                  (tau, pname, "dist-vs-eager", qtext))
+            assert_multiset_equal(per[("estimate", "eager")],
+                                  per[("greedy", "eager")], qtext,
+                                  (tau, "est-vs-greedy"))

@@ -1,0 +1,235 @@
+"""Property tests for the cardinality estimator and the estimate planner
+(:mod:`repro.core.estimate`, ``planner="estimate"``), plus the plan-cache
+regression fence for the planner knob.
+
+Covered properties:
+* single-pattern BGPs estimate exactly (the scan estimate IS the table
+  size the statistics recorded);
+* adding correlated *functional* patterns (≤1 object per subject) never
+  increases the estimate — monotone non-increasing growth of a star;
+* SF=0 / missing-term short-circuits still produce ``Plan(empty=True)``
+  under BOTH planners at both τ ∈ {0.25, 1.0};
+* disconnected BGPs estimate the full cross-product — never a silent
+  undercount;
+* the enumerator returns a permutation of the selected steps and only
+  cross-joins when the BGP is genuinely disconnected;
+* the Engine's LRU keys on the planner knob: flipping ``planner``
+  mid-session (or sharing a dataset between two engines with different
+  planners) can never serve a plan ordered by the other planner.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import estimate as est
+from repro.core.compiler import compile_bgp
+from repro.core.modifiers import peel_spine
+from repro.core.sparql import parse_sparql
+from repro.engine import Dataset, RuntimeConfig
+
+TAUS = (0.25, 1.0)
+
+
+def _graph(seed, n_ent=24, n_preds=4, n_triples=140):
+    rng = np.random.default_rng(seed)
+    return [(f"e{rng.integers(0, n_ent)}", f"p{rng.integers(0, n_preds)}",
+             f"e{rng.integers(0, n_ent)}") for _ in range(n_triples)]
+
+
+def _bgp_plan(ds, body, planner="estimate", tau_layout="extvp"):
+    query = parse_sparql(f"SELECT * WHERE {{ {body} }}", ds.dictionary)
+    core, _ = peel_spine(query)
+    return compile_bgp(core, ds.catalog, tau_layout, planner)
+
+
+def _final_estimate(ds, body):
+    plan = _bgp_plan(ds, body)
+    rows = est.estimate_order(plan.steps, ds.catalog)
+    assert rows is not None
+    return rows[-1].rows
+
+
+# ---------------------------------------------------------------------------
+# Estimator properties
+# ---------------------------------------------------------------------------
+
+def test_single_pattern_estimate_is_exact():
+    """One unbound pattern: the estimate is the recorded table size, which
+    is the exact answer — for VP scans and the full TT scan alike."""
+    for seed in (0, 1, 2):
+        ds = Dataset.from_triples(_graph(seed), threshold=0.25)
+        eng = ds.engine("eager", runtime=RuntimeConfig(planner="estimate"))
+        for body in ("?s p0 ?o", "?s p2 ?o", "?s ?p ?o"):
+            got = len(eng.query(f"SELECT * WHERE {{ {body} }}"))
+            assert _final_estimate(ds, body) == pytest.approx(got), \
+                (seed, body)
+
+
+def test_estimate_monotone_under_functional_correlation():
+    """Growing a subject star with *functional* predicates (every entity
+    has at most one object per predicate, like an email or gender edge)
+    can only filter rows, and the estimate must reflect that: each added
+    correlated pattern keeps the estimate non-increasing."""
+    for seed in (5, 6):
+        rng = np.random.default_rng(seed)
+        triples = []
+        for e in range(30):
+            # p0: fan-out edges; p1..p3: functional attributes (some
+            # entities lack them, so the patterns genuinely filter)
+            for _ in range(int(rng.integers(1, 4))):
+                triples.append((f"e{e}", "p0", f"e{rng.integers(0, 30)}"))
+            for p in ("p1", "p2", "p3"):
+                if rng.random() < 0.8:
+                    triples.append((f"e{e}", p, f"v{rng.integers(0, 6)}"))
+        ds = Dataset.from_triples(triples, threshold=1.0)
+        star = ["?x p0 ?y0", "?x p1 ?y1", "?x p2 ?y2", "?x p3 ?y3"]
+        prev = float("inf")
+        for k in range(1, len(star) + 1):
+            cur = _final_estimate(ds, " . ".join(star[:k]))
+            assert cur <= prev + 1e-9, (seed, k, cur, prev)
+            prev = cur
+
+
+def test_short_circuits_survive_estimate_planner():
+    """SF=0 correlations and missing-dictionary terms must still compile
+    to ``Plan(empty=True)`` at both τ values under BOTH planners — the
+    statistics-only empty answer is planner-invariant."""
+    # p0 edges only ever leave e-entities into v-entities; p1 only
+    # connects w-entities, so the OS correlation p0|p1 is empty (SF=0)
+    triples = [(f"e{i}", "p0", f"v{i}") for i in range(8)] + \
+              [(f"w{i}", "p1", f"w{i + 1}") for i in range(8)]
+    for tau in TAUS:
+        ds = Dataset.from_triples(triples, threshold=tau)
+        for planner in ("greedy", "estimate"):
+            p = _bgp_plan(ds, "?a p0 ?b . ?b p1 ?c", planner=planner)
+            assert p.empty, (tau, planner, "SF=0")
+            p = _bgp_plan(ds, "?a p0 ?b . ?b p1 e9999", planner=planner)
+            assert p.empty, (tau, planner, "missing term")
+            eng = ds.engine("eager",
+                            runtime=RuntimeConfig(planner=planner))
+            res = eng.query("SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }")
+            assert len(res) == 0
+            assert eng.metrics.short_circuits >= 1, (tau, planner)
+
+
+def test_bound_term_estimate_is_skew_aware():
+    """A constant on a heavily skewed column (one dominant value, like
+    ``rdf:type``) must estimate near the dominant frequency — the second
+    moment m2/|VP| — not the uniform size/distinct average."""
+    # p0: 60 of 64 objects are the same value; p1: 3 near-uniform values
+    triples = [(f"e{i}", "p0", "big" if i < 60 else f"t{i}")
+               for i in range(64)]
+    triples += [(f"e{i}", "p1", f"g{i % 3}") for i in range(60)]
+    ds = Dataset.from_triples(triples, threshold=1.0)
+    skewed = _bgp_plan(ds, "?s p0 big")
+    uniform = _bgp_plan(ds, "?s p1 g0")
+    e_skew = est.scan_estimate(skewed.steps[0], ds.catalog)[0]
+    e_unif = est.scan_estimate(uniform.steps[0], ds.catalog)[0]
+    assert e_skew == pytest.approx((60 ** 2 + 4) / 64)   # m2/|VP| ≈ 56.3
+    assert e_unif == pytest.approx(60 / 3)               # uniform stays
+    # uniform fallback when the skew stats are absent (older store)
+    ds.catalog.m2_s = ds.catalog.m2_o = None
+    assert est.scan_estimate(skewed.steps[0], ds.catalog)[0] == \
+        pytest.approx(64 / 5)                            # size/distinct_o
+
+
+def test_disconnected_bgp_estimates_cross_product():
+    """No shared variables => the estimate is the exact cross-product of
+    the table sizes, not a silent undercount."""
+    for seed in (7, 8):
+        ds = Dataset.from_triples(_graph(seed), threshold=1.0)
+        eng = ds.engine("eager", runtime=RuntimeConfig(planner="estimate"))
+        body = "?a p0 ?b . ?c p1 ?d"
+        got = len(eng.query(f"SELECT * WHERE {{ {body} }}"))
+        n0 = ds.catalog.vp_size(int(ds.dictionary.term_to_id["p0"]))
+        n1 = ds.catalog.vp_size(int(ds.dictionary.term_to_id["p1"]))
+        assert got == n0 * n1
+        assert _final_estimate(ds, body) == pytest.approx(got), seed
+
+
+def test_enumerator_permutes_and_stays_connected():
+    """The enumerator reorders the SAME selected steps (table selection
+    is planner-invariant) and every non-first step joins a variable that
+    is already bound, unless the BGP is disconnected."""
+    ds = Dataset.from_triples(_graph(11), threshold=0.25)
+    bodies = [
+        "?a p0 ?b . ?b p1 ?c . ?c p2 ?d",
+        "?a p0 ?b . ?a p1 ?c . ?b p2 ?d . ?c p3 ?e",
+        "e1 p0 ?b . ?b p1 ?c . ?c p2 ?d . ?d p3 ?e . ?e p0 ?f",
+    ]
+    from repro.core.algebra import tp_vars
+    for body in bodies:
+        greedy = _bgp_plan(ds, body, planner="greedy")
+        estimate = _bgp_plan(ds, body, planner="estimate")
+        assert estimate.planner == "estimate"
+        key = lambda s: (str(s.tp), s.kind, s.p2, s.sf, s.size, s.uses_tt)
+        assert sorted(map(key, greedy.steps)) == \
+            sorted(map(key, estimate.steps)), body
+        bound = set()
+        for i, step in enumerate(estimate.steps):
+            if i:
+                assert bound & set(tp_vars(step.tp)), (body, i)
+            bound |= set(tp_vars(step.tp))
+
+
+def test_estimate_falls_back_without_distinct_stats():
+    """A catalog stripped of distinct counts (the version-1 store shape)
+    must compile under planner="estimate" via the greedy path — and the
+    plan records the planner that actually ran."""
+    ds = Dataset.from_triples(_graph(13), threshold=0.25)
+    ds.catalog.distinct_s = ds.catalog.distinct_o = None
+    assert not est.supports(ds.catalog)
+    plan = _bgp_plan(ds, "?a p0 ?b . ?b p1 ?c", planner="estimate")
+    assert not plan.empty and plan.planner == "greedy"
+    eng = ds.engine("eager", runtime=RuntimeConfig(planner="estimate"))
+    res = eng.query("SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }")
+    ref = ds.engine("eager").query("SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }")
+    assert dict(res.as_multiset(sorted(res.cols))) == \
+        dict(ref.as_multiset(sorted(ref.cols)))
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache planner keying
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_keys_on_planner_knob():
+    """Flipping ``config.planner`` mid-session must compile a fresh plan
+    (distinct cache entry), never serve the other planner's order; and
+    two engines sharing one dataset but holding different planner configs
+    stay fully independent."""
+    ds = Dataset.from_triples(_graph(17), threshold=0.25)
+    q = "SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }"
+
+    cfg = RuntimeConfig(planner="greedy")
+    eng = ds.engine("eager", runtime=cfg)
+    p_greedy = eng.prepare(q)
+    assert p_greedy.plan.planner == "greedy"
+    cfg.planner = "estimate"
+    p_est = eng.prepare(q)
+    assert p_est is not p_greedy
+    assert p_est.plan.planner == "estimate"
+    assert len(eng.cache) == 2           # both orders cached side by side
+    cfg.planner = "greedy"
+    assert eng.prepare(q) is p_greedy    # flip back: cached, not rebuilt
+    assert eng.runtime_report()["planner"] == "greedy"
+
+    # two engines over the SAME dataset with different planner configs
+    cfg_g, cfg_e = RuntimeConfig(planner="greedy"), \
+        RuntimeConfig(planner="estimate")
+    eng_g = ds.engine("eager", runtime=cfg_g)
+    eng_e = ds.engine("eager", runtime=cfg_e)
+    assert eng_g is not eng_e
+    rg, re_ = eng_g.query(q), eng_e.query(q)
+    assert eng_g.prepare(q).plan.planner == "greedy"
+    assert eng_e.prepare(q).plan.planner == "estimate"
+    assert eng_e.runtime_report()["planner"] == "estimate"
+    assert dict(rg.as_multiset(sorted(rg.cols))) == \
+        dict(re_.as_multiset(sorted(re_.cols)))
+
+
+def test_runtime_config_rejects_unknown_planner():
+    with pytest.raises(ValueError):
+        RuntimeConfig(planner="cost-based-v2")
+    ds = Dataset.from_triples(_graph(19), threshold=1.0)
+    with pytest.raises(ValueError):
+        _bgp_plan(ds, "?a p0 ?b", planner="nope")

@@ -377,8 +377,9 @@ def test_runtime_report_shape(ds):
     eng = ds.engine("auto", runtime=RuntimeConfig())
     eng.query(Q_FOLLOWS.format(3))
     rep = eng.runtime_report()
-    assert set(rep) == {"backend", "auto", "router", "tuner", "config",
-                        "metrics"}
+    assert set(rep) == {"backend", "auto", "planner", "router", "tuner",
+                        "config", "metrics"}
+    assert rep["planner"] == "greedy"
     assert set(rep["router"]) == {"backends", "signatures", "decisions"}
     assert set(rep["tuner"]) == {"menu", "active", "retired", "buckets"}
     assert rep["config"]["router_warmup"] == rep["config"]["router_warmup"]

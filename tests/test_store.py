@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.stats import build_catalog
 from repro.core.table import LazyTableMap, Table
-from repro.engine import Dataset
+from repro.engine import Dataset, RuntimeConfig
 from repro.rdf.dictionary import Dictionary
 from repro.serve import SparqlServer
 from repro.store import (
@@ -62,6 +62,12 @@ def assert_catalogs_identical(a, b, ctx=""):
     assert a.extvp.threshold == b.extvp.threshold, ctx
     assert tuple(a.extvp.kinds) == tuple(b.extvp.kinds), ctx
     assert a.with_extvp == b.with_extvp, ctx
+    # distinct-count and skew statistics (format v2) round-trip exactly —
+    # absent on both sides or int-identical per predicate
+    assert a.distinct_s == b.distinct_s, ctx
+    assert a.distinct_o == b.distinct_o, ctx
+    assert a.m2_s == b.m2_s, ctx
+    assert a.m2_o == b.m2_o, ctx
     da, db = a.dictionary, b.dictionary
     assert da.id_to_term == db.id_to_term, ctx
     assert da.values.tobytes() == db.values.tobytes(), ctx  # NaN-exact
@@ -321,6 +327,61 @@ def test_load_foreign_format_and_version(tmp_path):
     mpath.write_text(json.dumps(manifest))
     with pytest.raises(StoreFormatError, match="not a"):
         Dataset.load(tmp_path / "s")
+
+
+def test_distinct_stats_roundtrip_byte_identical(tmp_path):
+    """Format v2: per-predicate distinct subject/object counts land in the
+    manifest, load back int-identical WITHOUT touching any column file,
+    and survive a save→load→save cycle byte-identically."""
+    ds = Dataset.from_triples(_triples(), threshold=0.25)
+    assert ds.catalog.has_distinct_stats
+    ds.save(tmp_path / "a")
+    manifest = load_manifest(str(tmp_path / "a"))
+    assert manifest["version"] == 2
+    assert set(manifest["distinct"]["s"]) == \
+        {str(p) for p in ds.catalog.vp}
+
+    loaded = Dataset.load(tmp_path / "a")
+    assert loaded.catalog.distinct_s == ds.catalog.distinct_s
+    assert loaded.catalog.distinct_o == ds.catalog.distinct_o
+    # stats served from the manifest alone — the lazy maps stay cold
+    assert loaded.catalog.vp.n_loaded == 0
+    assert loaded.catalog.extvp.tables.n_loaded == 0
+    # ...and the estimate planner runs off them on the loaded store
+    eng = loaded.engine("eager", runtime=RuntimeConfig(planner="estimate"))
+    q = "SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }"
+    assert eng.prepare(q).plan.planner == "estimate"
+
+    loaded.save(tmp_path / "b")                  # second hop: byte-identical
+    m2 = load_manifest(str(tmp_path / "b"))
+    assert json.dumps(m2["distinct"], sort_keys=True) == \
+        json.dumps(manifest["distinct"], sort_keys=True)
+
+
+def test_version1_manifest_loads_with_greedy_fallback(tmp_path):
+    """A pre-distinct-stats (version 1) store loads cleanly: the catalog
+    reports the stats as absent and planner="estimate" silently degrades
+    to the greedy order instead of crashing."""
+    ds = Dataset.from_triples(_triples(), threshold=0.25)
+    ds.save(tmp_path / "s")
+    mpath = tmp_path / "s" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 1
+    del manifest["distinct"]
+    mpath.write_text(json.dumps(manifest))
+
+    loaded = Dataset.load(tmp_path / "s", verify=True)   # no StoreFormatError
+    assert loaded.catalog.distinct_s is None
+    assert loaded.catalog.distinct_o is None
+    assert not loaded.catalog.has_distinct_stats
+
+    q = "SELECT * WHERE { ?a p0 ?b . ?b p1 ?c }"
+    eng = loaded.engine("eager", runtime=RuntimeConfig(planner="estimate"))
+    assert eng.prepare(q).plan.planner == "greedy"       # clean fallback
+    got = eng.query(q)
+    ref = ds.engine("eager").query(q)
+    assert dict(got.as_multiset(sorted(got.cols))) == \
+        dict(ref.as_multiset(sorted(ref.cols)))
 
 
 def test_checksum_mismatch_surfaces_on_touch(tmp_path):
