@@ -71,6 +71,7 @@ def _smap(body, mesh, in_specs, out_specs):
         return _shard_map(body, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
     except TypeError:          # newer jax: the check_rep kwarg is gone
+        # replint: disable=shard-map-check-rep -- the explicit decision is the check_rep=False attempt above; this branch only runs on jax versions that removed the kwarg (replication checking off by construction)
         return _shard_map(body, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs)
 
@@ -749,6 +750,7 @@ def _extvp_pair_program(mesh: Mesh, axes: Tuple[str, ...], use_bitmap: bool,
         # so skipping the check is sound
         fn = _shard_map(body, mesh=mesh, check_rep=False, **specs)
     except TypeError:           # newer jax: the check_rep kwarg is gone
+        # replint: disable=shard-map-check-rep -- the explicit decision is the check_rep=False attempt above; this branch only runs on jax versions that removed the kwarg (the body has no collectives)
         fn = _shard_map(body, mesh=mesh, **specs)
     return jax.jit(fn)
 
