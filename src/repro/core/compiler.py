@@ -106,7 +106,13 @@ def select_table(tp: TriplePattern, bgp: List[TriplePattern],
             if corr not in (CORR_SS, CORR_SO, CORR_OS):
                 continue  # OO not precomputed (paper §5.2)
             sf = catalog.sf(corr, p, q)
-            if sf < best_sf:
+            # Only credit reductions the store can actually serve: an SF
+            # above the build threshold τ was never materialized, and
+            # Catalog.table() would silently scan the full VP relation
+            # while the recorded sf/size misled join ordering and the
+            # cardinality estimator.  SF=0 stays selectable regardless —
+            # it is a statistics-only short-circuit, no table needed.
+            if sf < best_sf and (sf == 0.0 or catalog.materialized(corr, p, q)):
                 best_sf = sf
                 best_kind, best_p2 = corr, q
                 best_size = catalog.size(corr, p, q)

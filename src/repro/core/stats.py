@@ -88,6 +88,15 @@ class Catalog:
     def vp_size(self, p: int) -> int:
         return len(self.vp[p]) if p in self.vp else 0
 
+    def materialized(self, kind: str, p1: int, p2: int) -> bool:
+        """True when ExtVP^kind_{p1|p2} exists in the materialized (SF ≤ τ)
+        set — a containment check only, so lazy stores never load a table
+        to answer it.  Table selection (Algorithm 1) must not credit a
+        reduction that was pruned by the threshold: ``table()`` would
+        silently fall back to the full VP relation while the plan's
+        ordering and size statistics assume the reduced one."""
+        return (kind, p1, p2) in self.extvp.tables
+
     @property
     def has_distinct_stats(self) -> bool:
         """True when per-predicate distinct counts are available (the
