@@ -1,0 +1,129 @@
+"""Static-verifier prepare() overhead gate (``verify_plans=True``).
+
+Measures what :mod:`repro.analysis.verifier` adds to the engine's
+prepare path over the WatDiv basic suite.  The honest denominator is a
+**cold cache-miss prepare**: in a live process the plan cache serves
+every repeated template without reaching ``Engine._build`` at all, so
+the only prepares that ever happen are first-time ones that pay parse +
+plan + backend trace/compile.  Warm in-process rebuild loops (where
+jax's compile caches cut a build to ~0.1 ms) measure a state the plan
+cache makes unreachable and wildly overstate the verifier's share.
+
+Measurement design: the verifier is strictly additive — ``_build`` runs
+it after the backend's prepare, sharing no state with it — so each cold
+subprocess times the two terms separately on the same artifacts (one
+pass of cold prepares, then one pass of cold verifies) and reports the
+ratio.  A/B-ing whole subprocesses instead would difference two ~ms
+compile times whose run-to-run variance dwarfs the ~50 µs verifier
+term.
+
+Emits ``BENCH_verify_overhead.json``::
+
+    {"scale": ..., "n_queries": ..., "reps": ...,
+     "prepare_ms_per_query": ..., "verify_ms_per_query": ...,
+     "overhead_pct": ..., "gate_pct": 5.0, "ok": true}
+
+and fails the harness row (derived ``FAIL``) when the overhead exceeds
+the 5% gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEFAULT_OUT = "BENCH_verify_overhead.json"
+GATE_PCT = 5.0
+REPS = 5
+#: the overhead is a ratio of per-query times and is insensitive to
+#: graph scale (numerator and denominator both grow with plan size);
+#: cap the child's generation cost so the gate stays cheap to run
+MAX_SCALE = 0.5
+
+
+def _child(scale: float) -> None:
+    """One cold process: build the store, cold-prepare the basic suite
+    with the verifier off, then cold-verify the prepared artifacts.
+    Prints both per-query times as the last stdout line."""
+    from repro.analysis.verifier import verify_prepared
+    from repro.core.stats import build_catalog
+    from repro.engine import RuntimeConfig
+    from repro.engine.dataset import Dataset
+    from repro.rdf.generator import WatDivConfig, generate_watdiv
+    from repro.rdf.workloads import basic_queries
+
+    tt, d, sch = generate_watdiv(WatDivConfig(scale_factor=scale, seed=7))
+    cat = build_catalog(tt, d)
+    ds = Dataset(cat, d, sch)
+    queries = [q for insts in basic_queries(sch, n_instances=1).values()
+               for q in insts]
+    eng = ds.engine("jit", runtime=RuntimeConfig(verify_plans=False))
+    t0 = time.perf_counter()
+    prepped = [eng.prepare(q) for q in queries]
+    t_prepare = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for p in prepped:
+        verify_prepared(p, cat).raise_if_failed()
+    t_verify = time.perf_counter() - t0
+    print(json.dumps({"prepare_s": t_prepare / len(queries),
+                      "verify_s": t_verify / len(queries),
+                      "n_queries": len(queries)}))
+
+
+def _spawn(scale: float) -> dict:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child",
+         "--scale", str(scale)],
+        env=env, cwd=root, capture_output=True, text=True, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(scale: float = 5.0, csv=None, out_path: str = DEFAULT_OUT) -> dict:
+    scale = min(scale, MAX_SCALE)
+    results = [_spawn(scale) for _ in range(REPS)]
+    ratios = sorted(r["verify_s"] / r["prepare_s"] for r in results)
+    prep = sorted(r["prepare_s"] for r in results)
+    ver = sorted(r["verify_s"] for r in results)
+    overhead = ratios[len(ratios) // 2] * 100.0
+    report = {
+        "scale": scale, "n_queries": results[0]["n_queries"], "reps": REPS,
+        "prepare_ms_per_query": prep[len(prep) // 2] * 1e3,
+        "verify_ms_per_query": ver[len(ver) // 2] * 1e3,
+        "overhead_pct": overhead, "gate_pct": GATE_PCT,
+        "ok": overhead < GATE_PCT,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    if csv is not None:
+        csv.add("verify_overhead", ver[len(ver) // 2],
+                f"overhead={overhead:.2f}%"
+                + ("" if report["ok"] else " FAIL"))
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=5.0)
+    ap.add_argument("--child", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.child:
+        _child(min(args.scale, MAX_SCALE))
+        return
+    report = run(scale=args.scale, out_path=args.out)
+    print(json.dumps(report, indent=2))
+    if not report["ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

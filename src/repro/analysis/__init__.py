@@ -1,0 +1,29 @@
+"""Static analysis over the engine: plan/IR verification and trace lint.
+
+Two independent layers share this package because they guard the same
+contract — everything the engine runs must stay inside the statically
+verifiable, device-executable fragment:
+
+* :mod:`repro.analysis.verifier` — a non-executing pass over compiled
+  :class:`~repro.core.compiler.Plan` / ``CorePlan`` artifacts (and the
+  executors built from them) checking the invariants the paper's
+  Algorithms 1/4 and the static-shape runtime rely on.  Wired into
+  ``Engine`` prepare behind ``RuntimeConfig(verify_plans=...)``.
+* :mod:`repro.analysis.lint` — an AST lint ("replint") over the source
+  tree for JAX/Pallas trace-safety pitfalls, run as a CI gate through
+  ``tools/replint.py``.
+"""
+
+from repro.analysis.lint import (
+    LintFinding, RULES, lint_file, lint_paths, lint_source,
+)
+from repro.analysis.verifier import (
+    PlanDiagnostic, PlanVerificationError, VerificationReport,
+    verify_core, verify_executor, verify_plan, verify_prepared,
+)
+
+__all__ = [
+    "PlanDiagnostic", "PlanVerificationError", "VerificationReport",
+    "verify_plan", "verify_core", "verify_executor", "verify_prepared",
+    "LintFinding", "RULES", "lint_source", "lint_file", "lint_paths",
+]

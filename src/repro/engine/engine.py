@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.verifier import verify_prepared
 from repro.engine.backends import (
     ExecutionBackend, ExecutionContext, PreparedQuery, create_backend,
 )
@@ -269,6 +270,8 @@ class Engine:
         if template is None or not template.rebindable:
             template = QueryTemplate.concrete(qtext, self.ctx.dictionary)
         prepared = self._backends[bname].prepare(template, self.ctx)
+        if getattr(self.config, "verify_plans", False):
+            verify_prepared(prepared, self.ctx.catalog).raise_if_failed()
         key = sig if template.rebindable else "=" + _normalize(qtext)
         self.cache.put(self._cache_key(bname, key), prepared)
         return prepared
@@ -349,6 +352,9 @@ class Engine:
         if getattr(prepared, "fallback", False):
             lines.append("note: prepared as an eager fallback "
                          "(device path cannot express this template)")
+        # static-verifier verdict — always reported here (explain is the
+        # diagnostic surface), regardless of the verify_plans gate
+        lines.append(verify_prepared(prepared, self.ctx.catalog).describe())
         return "\n".join(lines)
 
     def _explain_cardinalities(self, prepared: PreparedQuery, qtext: str,

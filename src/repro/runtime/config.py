@@ -39,6 +39,13 @@ def _env_float(name: str, default: float) -> float:
     return float(os.environ.get(name, default))
 
 
+def _env_bool(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in ("", "0", "false", "no", "off")
+
+
 def _env_shapes(name: str, default: Tuple[int, ...]) -> Tuple[int, ...]:
     raw = os.environ.get(name)
     if raw is None:
@@ -100,6 +107,14 @@ class RuntimeConfig:
         self.tuner_alpha = _env_float("REPRO_RT_TUNER_ALPHA", 0.3)
         # first N launches per bucket shape are compile-heavy; discard
         self.tuner_discard = _env_int("REPRO_RT_TUNER_DISCARD", 1)
+
+        ######## Static analysis ########
+        # run the plan/IR verifier (repro.analysis.verifier) over every
+        # prepared artifact inside Engine prepare; violations raise
+        # PlanVerificationError before anything executes.  Off by default
+        # in production (the checks cost a few percent of prepare());
+        # tests/conftest.py turns it on for the whole suite.
+        self.verify_plans = _env_bool("REPRO_RT_VERIFY_PLANS", False)
 
         ######## Micro-batching ########
         # static batch-shape menu (Engine pads buckets up to these); the

@@ -5,6 +5,11 @@ spawn subprocesses with their own XLA_FLAGS."""
 import os
 import sys
 
+# the plan verifier is on for the whole suite (the process-wide
+# RuntimeConfig reads the env at import, so set it before repro loads);
+# explicit env settings still win
+os.environ.setdefault("REPRO_RT_VERIFY_PLANS", "1")
+
 sys.path.insert(0, os.path.dirname(__file__))
 from _hypothesis_shim import install as _install_hypothesis_shim
 

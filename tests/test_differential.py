@@ -233,13 +233,10 @@ def test_backends_match_reference(data):
             assert eng.metrics.device_fallbacks == 0, (seed, tau, name)
 
 
-def test_differential_fixed_seed_regressions():
-    """A pinned mini-corpus (graph + the query shapes the sweep draws
-    from) so failures here are reproducible without any shim/hypothesis
-    draw order involved."""
-    rng = np.random.default_rng(1234)
-    triples = random_triples(rng, 8, 2, 30)
-    queries = [
+# The pinned mini-corpus (shared with tests/test_analysis.py's verifier
+# sweep): every query shape the randomized sweep draws from, over a
+# reproducible graph.
+FIXED_QUERIES = [
         "SELECT * WHERE { ?v0 p0 ?v1 . ?v1 p1 ?v2 }",
         "SELECT * WHERE { ?v0 p0 ?v1 FILTER(?v0 != ?v1) }",
         "SELECT * WHERE { ?v0 p0 ?v1 OPTIONAL { ?v1 p1 ?w } }",
@@ -274,7 +271,21 @@ def test_differential_fixed_seed_regressions():
         "UNION { ?v0 p1 ?v1 } } ORDER BY ?v1 LIMIT 7",
         "SELECT DISTINCT * WHERE { { ?v0 p0 ?v1 } UNION { ?v0 p1 ?v1 } } "
         "ORDER BY DESC(?v1) ?v0",
-    ]
+]
+
+
+def fixed_corpus_triples():
+    """The pinned graph the mini-corpus runs over."""
+    rng = np.random.default_rng(1234)
+    return random_triples(rng, 8, 2, 30)
+
+
+def test_differential_fixed_seed_regressions():
+    """A pinned mini-corpus (graph + the query shapes the sweep draws
+    from) so failures here are reproducible without any shim/hypothesis
+    draw order involved."""
+    triples = fixed_corpus_triples()
+    queries = FIXED_QUERIES
     mesh = jax.make_mesh((1,), ("data",))
     for tau in TAUS:
         ds = Dataset.from_triples(triples, threshold=tau,
