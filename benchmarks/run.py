@@ -14,7 +14,7 @@ import argparse
 
 from benchmarks import adaptive_routing, common, modifier_queries, \
     plan_enum, sec74_threshold, serve_throughput, store_load, table2_load, \
-    table3_st, table4_basic, table5_il, verify_overhead
+    table3_st, table4_basic, table5_il, trace_overhead, verify_overhead
 from benchmarks.common import Csv
 
 TABLES = {
@@ -29,6 +29,7 @@ TABLES = {
     "routing": adaptive_routing.run,  # writes BENCH_adaptive_routing.json
     "plan_enum": plan_enum.run,      # writes BENCH_plan_enum.json
     "verify": verify_overhead.run,   # writes BENCH_verify_overhead.json
+    "trace": trace_overhead.run,     # writes BENCH_trace_overhead.json
 }
 
 

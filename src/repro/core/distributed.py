@@ -645,8 +645,8 @@ class DistributedExecutor:
 
     def run(self, max_retries: int = 16,
             bounds: Optional[np.ndarray] = None,
-            fconsts: Optional[np.ndarray] = None
-            ) -> Tuple[np.ndarray, Tuple[str, ...]]:
+            fconsts: Optional[np.ndarray] = None,
+            trace=None) -> Tuple[np.ndarray, Tuple[str, ...]]:
         flat = self._flat_inputs()
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
@@ -655,10 +655,23 @@ class DistributedExecutor:
             np.asarray(fconsts, dtype=np.int32).reshape(len(self.filter_slots))
         fj = jnp.asarray(fc)
         caps = tuple(self.caps)
-        for _ in range(max_retries):
-            data, ns, total, ovf = self._jitted(caps, bj, fj, self._values,
-                                                *flat)
-            ovf = np.asarray(ovf)
+        for attempt in range(max_retries):
+            if trace is not None:
+                # fenced launch span (traced requests only) — see
+                # PlanExecutor.run
+                sid = trace.start("device.launch", backend="distributed",
+                                  attempt=attempt, batch=1,
+                                  shards=self.n_shards,
+                                  cap_slots=sum(caps))
+                data, ns, total, ovf = self._jitted(caps, bj, fj,
+                                                    self._values, *flat)
+                jax.block_until_ready((data, ns, ovf))
+                ovf = np.asarray(ovf)
+                trace.end(sid, overflow=bool(ovf.any()))
+            else:
+                data, ns, total, ovf = self._jitted(caps, bj, fj,
+                                                    self._values, *flat)
+                ovf = np.asarray(ovf)
             if not ovf.any():
                 self.caps = list(caps)   # keep grown caps across requests
                 data = np.asarray(data)
@@ -678,7 +691,8 @@ class DistributedExecutor:
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
                   fconsts_batch: Optional[Sequence[np.ndarray]] = None,
-                  max_retries: int = 16) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+                  max_retries: int = 16,
+                  trace=None) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of the plan in one sharded launch;
         see :meth:`repro.core.jexec.PlanExecutor.run_batch` for the retry
         contract (any element overflowing retries the whole batch)."""
@@ -697,10 +711,21 @@ class DistributedExecutor:
                            for f in fconsts_batch])
         fj = jnp.asarray(fb)
         caps = tuple(self.caps)
-        for _ in range(max_retries):
-            data, ns, total, ovf = self._jitted_batch(caps, bj, fj,
-                                                      self._values, *flat)
-            ovf = np.asarray(ovf)                # (B, n_steps)
+        for attempt in range(max_retries):
+            if trace is not None:
+                sid = trace.start("device.launch", backend="distributed",
+                                  attempt=attempt, batch=len(bb),
+                                  shards=self.n_shards,
+                                  cap_slots=sum(caps))
+                data, ns, total, ovf = self._jitted_batch(
+                    caps, bj, fj, self._values, *flat)
+                jax.block_until_ready((data, ns, ovf))
+                ovf = np.asarray(ovf)            # (B, n_steps)
+                trace.end(sid, overflow=bool(ovf.any()))
+            else:
+                data, ns, total, ovf = self._jitted_batch(
+                    caps, bj, fj, self._values, *flat)
+                ovf = np.asarray(ovf)            # (B, n_steps)
             if not ovf.any():
                 self.caps = list(caps)
                 data = np.asarray(data)          # (B, S*cap, k)

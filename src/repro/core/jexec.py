@@ -1233,8 +1233,8 @@ class PlanExecutor:
 
     def run(self, max_retries: int = 16,
             bounds: Optional[np.ndarray] = None,
-            fconsts: Optional[np.ndarray] = None
-            ) -> Tuple[np.ndarray, Tuple[str, ...]]:
+            fconsts: Optional[np.ndarray] = None,
+            trace=None) -> Tuple[np.ndarray, Tuple[str, ...]]:
         rows, ns, tt_rows, tt_n, values = self._device_inputs
         b = self._default_bounds if bounds is None else \
             np.asarray(bounds, dtype=np.int32).reshape(self._default_bounds.shape)
@@ -1243,10 +1243,23 @@ class PlanExecutor:
             np.asarray(fconsts, dtype=np.int32).reshape(len(self.filter_slots))
         fj = jnp.asarray(fc)
         caps = tuple(self.caps)
-        for _ in range(max_retries):
-            data, n, ovf = self._jitted(caps, rows, ns, tt_rows, tt_n,
-                                        bj, fj, values)
-            ovf = np.asarray(ovf)
+        for attempt in range(max_retries):
+            if trace is not None:
+                # fenced launch span: block_until_ready keeps later host
+                # work from absorbing the device time — traced requests
+                # only (the untraced path stays fully async)
+                sid = trace.start("device.launch", backend="jit",
+                                  attempt=attempt, batch=1,
+                                  cap_slots=sum(caps))
+                data, n, ovf = self._jitted(caps, rows, ns, tt_rows,
+                                            tt_n, bj, fj, values)
+                jax.block_until_ready((data, n, ovf))
+                ovf = np.asarray(ovf)
+                trace.end(sid, overflow=bool(ovf.any()))
+            else:
+                data, n, ovf = self._jitted(caps, rows, ns, tt_rows, tt_n,
+                                            bj, fj, values)
+                ovf = np.asarray(ovf)
             if not ovf.any():
                 # keep grown caps: a hot template must not pay the
                 # overflow->retry double-launch on every request
@@ -1259,7 +1272,8 @@ class PlanExecutor:
 
     def run_batch(self, bounds_batch: Sequence[np.ndarray],
                   fconsts_batch: Optional[Sequence[np.ndarray]] = None,
-                  max_retries: int = 16) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
+                  max_retries: int = 16,
+                  trace=None) -> List[Tuple[np.ndarray, Tuple[str, ...]]]:
         """Execute B constant-bindings of this template's program in ONE
         XLA launch: the (B, n_steps, 2) bounds stack and the (B, n_fc)
         filter-constant stack are the only batched inputs (tables
@@ -1282,10 +1296,20 @@ class PlanExecutor:
                            for f in fconsts_batch])
         fj = jnp.asarray(fb)
         caps = tuple(self.caps)
-        for _ in range(max_retries):
-            data, n, ovf = self._jitted_batch(caps, rows, ns, tt_rows,
-                                              tt_n, bj, fj, values)
-            ovf = np.asarray(ovf)                # (B, n_pipeline[+1])
+        for attempt in range(max_retries):
+            if trace is not None:
+                sid = trace.start("device.launch", backend="jit",
+                                  attempt=attempt, batch=len(bb),
+                                  cap_slots=sum(caps))
+                data, n, ovf = self._jitted_batch(caps, rows, ns, tt_rows,
+                                                  tt_n, bj, fj, values)
+                jax.block_until_ready((data, n, ovf))
+                ovf = np.asarray(ovf)            # (B, n_pipeline[+1])
+                trace.end(sid, overflow=bool(ovf.any()))
+            else:
+                data, n, ovf = self._jitted_batch(caps, rows, ns, tt_rows,
+                                                  tt_n, bj, fj, values)
+                ovf = np.asarray(ovf)            # (B, n_pipeline[+1])
             if not ovf.any():
                 self.caps = list(caps)
                 cols = self._final_cols()

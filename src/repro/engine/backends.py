@@ -89,18 +89,26 @@ class PreparedQuery:
         self.query: Query = template.query
 
     # -- interface -------------------------------------------------------------
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+    def run(self, binding: Optional[ConstantBinding] = None,
+            trace=None) -> Result:
+        """``trace`` is the sampled request's
+        :class:`~repro.obs.tracer.TraceContext` (or ``None``, the
+        default and the fast path) — implementations emit their
+        launch/decode spans onto it."""
         raise NotImplementedError
 
-    def run_batch(self, bindings: List[Optional[ConstantBinding]]
-                  ) -> List[Result]:
+    def run_batch(self, bindings: List[Optional[ConstantBinding]],
+                  trace=None) -> List[Result]:
         """Evaluate B constant-bindings of this template; one Result per
         binding, in order.  The base implementation is the sequential
         loop — the parity oracle every vectorized override is tested
         against.  Device backends override it to execute the whole batch
         in a single program launch (the bindings stack into a leading
-        batch axis of the ``bounds`` input)."""
-        return [self.run(b) for b in bindings]
+        batch axis of the ``bounds`` input).  ``trace`` is the chunk's
+        lead trace context; the sequential loop attributes it to the
+        first binding."""
+        return [self.run(b, trace=trace if i == 0 else None)
+                for i, b in enumerate(bindings)]
 
     # -- shared helpers --------------------------------------------------------
     @property
@@ -121,7 +129,10 @@ class _EmptyPrepared(PreparedQuery):
         self.backend = backend
         self.plan = Plan(empty=True, vars=self.out_cols)
 
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+    def run(self, binding: Optional[ConstantBinding] = None,
+            trace=None) -> Result:
+        if trace is not None:
+            trace.event("short_circuit", why="statistics-empty plan")
         return self._empty()
 
 
@@ -145,21 +156,31 @@ class _EagerPrepared(PreparedQuery):
                                     ctx.planner)
             self.spine = spine
 
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+    def run(self, binding: Optional[ConstantBinding] = None,
+            trace=None) -> Result:
         binding = binding or _NO_BINDING
         if binding.missing:
             return self._empty()
+        sid = trace.start("host.execute", backend="eager") \
+            if trace is not None else None
         if self.plan is not None:
             if self.plan.empty:
+                if trace is not None:
+                    trace.end(sid, rows=0, short_circuit=True)
                 return self._empty()
             plan = rebind_plan(self.plan, binding.mapping)
             spine = substitute_spine(self.spine, binding.mapping)
             b = apply_spine_host(execute_plan(plan, self.ctx.catalog), spine,
                                  self.ctx.catalog)
-            return Result(b, self.ctx.dictionary)
-        query = substitute_query(self.query, binding.mapping)
-        return Result(execute(query, self.ctx.catalog, layout=self.ctx.layout),
-                      self.ctx.dictionary)
+            res = Result(b, self.ctx.dictionary)
+        else:
+            query = substitute_query(self.query, binding.mapping)
+            res = Result(execute(query, self.ctx.catalog,
+                                 layout=self.ctx.layout),
+                         self.ctx.dictionary)
+        if trace is not None:
+            trace.end(sid, rows=len(res))
+        return res
 
 
 class _VectorizedPrepared(PreparedQuery):
@@ -184,18 +205,28 @@ class _VectorizedPrepared(PreparedQuery):
         # device-established row order)
         return Result(Bindings(cols, data), self.ctx.dictionary)
 
-    def run(self, binding: Optional[ConstantBinding] = None) -> Result:
+    def run(self, binding: Optional[ConstantBinding] = None,
+            trace=None) -> Result:
         binding = binding or _NO_BINDING
         if binding.missing:
+            if trace is not None:
+                trace.event("short_circuit", why="constant missing "
+                            "from the dictionary")
             return self._empty()
         plan = rebind_plan(self.plan, binding.mapping)
         data, cols = self.executor.run(
             bounds=self.executor.bounds_from_plan(plan),
-            fconsts=self.executor.fconsts_from_mapping(binding.mapping))
-        return self._wrap(data, cols)
+            fconsts=self.executor.fconsts_from_mapping(binding.mapping),
+            trace=trace)
+        if trace is None:
+            return self._wrap(data, cols)
+        sid = trace.start("decode")
+        res = self._wrap(data, cols)
+        trace.end(sid, rows=len(res))
+        return res
 
-    def run_batch(self, bindings: List[Optional[ConstantBinding]]
-                  ) -> List[Result]:
+    def run_batch(self, bindings: List[Optional[ConstantBinding]],
+                  trace=None) -> List[Result]:
         bindings = [b or _NO_BINDING for b in bindings]
         results: List[Optional[Result]] = [None] * len(bindings)
         live: List[int] = []
@@ -216,9 +247,13 @@ class _VectorizedPrepared(PreparedQuery):
             while len(bounds) < len(bindings):
                 bounds.append(bounds[-1])
                 fconsts.append(fconsts[-1])
-            outs = self.executor.run_batch(bounds, fconsts)
+            outs = self.executor.run_batch(bounds, fconsts, trace=trace)
+            sid = trace.start("demux", batch=len(bindings),
+                              live=len(live)) if trace is not None else None
             for i, (data, cols) in zip(live, outs):
                 results[i] = self._wrap(data, cols)
+            if trace is not None:
+                trace.end(sid)
         return results
 
     def lower(self, caps=None):

@@ -24,11 +24,9 @@ own runtimes are stable: here we cache *compilation*, never results.
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
 
 from repro.analysis.verifier import verify_prepared
 from repro.engine.backends import (
@@ -36,6 +34,8 @@ from repro.engine.backends import (
 )
 from repro.engine.result import Result
 from repro.engine.template import QueryTemplate, _normalize, template_signature
+from repro.obs import LogHistogram, Tracer
+from repro.obs.tracer import TraceContext
 from repro.runtime import BackendRouter, BatchTuner, RouteDecision, \
     RuntimeConfig
 from repro.runtime.config import runtime_config as _global_runtime_config
@@ -43,10 +43,14 @@ from repro.runtime.config import runtime_config as _global_runtime_config
 __all__ = ["Engine", "ServerMetrics", "PlanCache"]
 
 
-# Latency/queue sample lists keep only the newest window: a long-lived
-# server must not grow per-request state without bound, and recent
-# samples are what an operator's percentiles should reflect anyway.
+# Compat sample windows (``latencies_ms`` / ``queue_ms`` below) keep only
+# the newest slice — the histograms are the real percentile source now
+# and never truncate.
 _MAX_SAMPLES = 8192
+
+# cardinality-drift reports cached per (prepared, binding): a hot
+# template's repeated traces must not re-run the host joins every time
+_DRIFT_CACHE_SIZE = 1024
 
 
 @dataclass
@@ -61,12 +65,10 @@ class ServerMetrics:
     device_fallbacks: int = 0
     plan_hits: int = 0
     plan_misses: int = 0
-    latencies_ms: List[float] = field(default_factory=list)
     # micro-batching: one "batch" is one device launch serving B requests
     batches: int = 0          # batched launches executed
     batched_requests: int = 0 # requests served through a batched launch
     padding_slots: int = 0    # slots wasted padding up to a static shape
-    queue_ms: List[float] = field(default_factory=list)  # submit -> result
     # adaptive runtime: requests per backend actually executed on (on a
     # static engine this is all one key; under "auto" it shows the mix)
     routed: Dict[str, int] = field(default_factory=dict)
@@ -75,19 +77,45 @@ class ServerMetrics:
     # holding the metrics object (SparqlServer, dashboards) pull the full
     # router/tuner state without a reference to the engine itself.
     runtime_report_fn = None
+    # Attached by the owning Engine: lets the Prometheus renderer expose
+    # per-stage span histograms without a reference to the engine.
+    tracer: Optional[Tracer] = None
+
+    def __post_init__(self) -> None:
+        # Histograms are the primary store: O(1) memory, O(1) record,
+        # exact counts, mergeable.  The bounded deques only back the
+        # legacy ``latencies_ms`` / ``queue_ms`` list views (compat shim
+        # until callers migrate) — a deque's maxlen trims in O(1) where
+        # the old lists materialized ``[ms] * count`` and re-sliced.
+        self.latency_hist = LogHistogram()
+        self.queue_hist = LogHistogram()
+        self._lat_samples: "deque" = deque(maxlen=_MAX_SAMPLES)
+        self._queue_samples: "deque" = deque(maxlen=_MAX_SAMPLES)
+
+    # -- compat shims (deprecated list views; see docs/observability.md) ------
+    @property
+    def latencies_ms(self) -> List[float]:
+        """Newest latency samples as a list (bounded window).  Deprecated
+        read-only view — percentiles come from ``latency_hist`` now."""
+        return list(self._lat_samples)
+
+    @property
+    def queue_ms(self) -> List[float]:
+        """Newest queue-wait samples as a list (bounded window).
+        Deprecated read-only view — use ``queue_hist``."""
+        return list(self._queue_samples)
 
     def record_route(self, backend: str, count: int = 1) -> None:
         self.routed[backend] = self.routed.get(backend, 0) + count
 
     def record_latency(self, ms: float, count: int = 1) -> None:
-        self.latencies_ms.extend([ms] * count)
-        if len(self.latencies_ms) > _MAX_SAMPLES:
-            del self.latencies_ms[: -_MAX_SAMPLES]
+        self.latency_hist.record(ms, count)
+        # the compat window never needs more than maxlen copies
+        self._lat_samples.extend([ms] * min(count, _MAX_SAMPLES))
 
     def record_queue(self, ms: float) -> None:
-        self.queue_ms.append(ms)
-        if len(self.queue_ms) > _MAX_SAMPLES:
-            del self.queue_ms[: -_MAX_SAMPLES]
+        self.queue_hist.record(ms)
+        self._queue_samples.append(ms)
 
     def runtime_report(self) -> Dict[str, object]:
         """The owning engine's router/tuner snapshot (empty when the
@@ -95,10 +123,12 @@ class ServerMetrics:
         fn = self.runtime_report_fn
         return fn() if fn is not None else {}
 
-    def summary(self) -> Dict[str, float]:
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
-        qms = np.asarray(self.queue_ms) if self.queue_ms else np.zeros(1)
+    def summary(self) -> Dict[str, object]:
+        """Operator summary.  Percentiles are ``None`` (not a fabricated
+        0.0) until at least one sample exists, so a dashboard can tell
+        "idle" from "fast"."""
         slots = self.batched_requests + self.padding_slots
+        lat, qms = self.latency_hist, self.queue_hist
         return {
             "served": self.served,
             "rows": self.rows,
@@ -107,18 +137,26 @@ class ServerMetrics:
             "device_fallbacks": self.device_fallbacks,
             "plan_hit_rate": self.plan_hits / max(self.plan_hits
                                                   + self.plan_misses, 1),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p90_ms": float(np.percentile(lat, 90)),
-            "p99_ms": float(np.percentile(lat, 99)),
+            "p50_ms": lat.percentile(50),
+            "p90_ms": lat.percentile(90),
+            "p99_ms": lat.percentile(99),
             "batches": self.batches,
             "batched_requests": self.batched_requests,
             # fraction of launched batch slots carrying real requests
             "batch_occupancy": self.batched_requests / max(slots, 1),
             "padding_waste": self.padding_slots / max(slots, 1),
-            "queue_p50_ms": float(np.percentile(qms, 50)),
-            "queue_p99_ms": float(np.percentile(qms, 99)),
+            "queue_p50_ms": qms.percentile(50),
+            "queue_p99_ms": qms.percentile(99),
             "routed": dict(self.routed),
         }
+
+    def prometheus(self) -> str:
+        """This metrics object in the Prometheus text exposition format
+        (counters, latency/queue/per-stage histograms, router and tuner
+        gauges) — see :mod:`repro.obs.prometheus` and
+        docs/observability.md for the metric catalog."""
+        from repro.obs.prometheus import render
+        return render(self)
 
 
 class PlanCache:
@@ -209,6 +247,12 @@ class Engine:
         self.cache = PlanCache(plan_cache_size)
         self.metrics = ServerMetrics()
         self.metrics.runtime_report_fn = self.runtime_report
+        #: span tracing (repro.obs) — inert until the config's
+        #: ``trace_sample_rate`` knob is > 0 (the hot path's only cost is
+        #: the ``tracer.active`` guard)
+        self.tracer = Tracer(self.config)
+        self.metrics.tracer = self.tracer
+        self._drift_cache: "OrderedDict" = OrderedDict()
         if batch_shapes is None:
             shapes = self.config.batch_shapes
         else:
@@ -258,8 +302,10 @@ class Engine:
         # repeats still skip parsing and compilation.
         return self.cache.get(self._cache_key(bname, "=" + _normalize(qtext)))
 
-    def _build(self, bname: str, qtext: str, sig: str) -> PreparedQuery:
+    def _build(self, bname: str, qtext: str, sig: str,
+               trace: Optional[TraceContext] = None) -> PreparedQuery:
         self.ctx.planner = self._planner
+        sid = trace.start("parse") if trace is not None else None
         try:
             template = QueryTemplate(qtext, self.ctx.dictionary)
         except ValueError:
@@ -269,23 +315,38 @@ class Engine:
             template = None
         if template is None or not template.rebindable:
             template = QueryTemplate.concrete(qtext, self.ctx.dictionary)
+        if trace is not None:
+            trace.end(sid, rebindable=template.rebindable)
+            sid = trace.start("plan", backend=bname,
+                              planner=self._planner)
         prepared = self._backends[bname].prepare(template, self.ctx)
+        if trace is not None:
+            trace.end(sid, fallback=getattr(prepared, "fallback", False))
         if getattr(self.config, "verify_plans", False):
+            sid = trace.start("verify") if trace is not None else None
             verify_prepared(prepared, self.ctx.catalog).raise_if_failed()
+            if trace is not None:
+                trace.end(sid)
         key = sig if template.rebindable else "=" + _normalize(qtext)
         self.cache.put(self._cache_key(bname, key), prepared)
         return prepared
 
     def _prepared_for(self, bname: str, qtext: str, sig: str,
-                      counted: bool = False) -> PreparedQuery:
+                      counted: bool = False,
+                      trace: Optional[TraceContext] = None
+                      ) -> PreparedQuery:
         prepared = self._lookup(bname, qtext, sig)
         if prepared is not None:
             if counted:
                 self.metrics.plan_hits += 1
+            if trace is not None:
+                trace.event("plan_cache", outcome="hit", backend=bname)
             return prepared
         if counted:
             self.metrics.plan_misses += 1
-        return self._build(bname, qtext, sig)
+        if trace is not None:
+            trace.event("plan_cache", outcome="miss", backend=bname)
+        return self._build(bname, qtext, sig, trace=trace)
 
     def prepare(self, qtext: str) -> PreparedQuery:
         """Prepared form of ``qtext``'s template, from cache if present,
@@ -299,7 +360,8 @@ class Engine:
     # -- routing ---------------------------------------------------------------
     def _route(self, qtext: str, sig: str, counted: bool = True,
                peek: bool = False,
-               use: Optional[RouteDecision] = None
+               use: Optional[RouteDecision] = None,
+               trace: Optional[TraceContext] = None
                ) -> Tuple[RouteDecision, PreparedQuery]:
         """Decide a backend for this request and return its prepared
         query.  A backend whose ``prepare`` raises (auto mode only) is
@@ -316,16 +378,29 @@ class Engine:
                 decision = self.router.peek(sig) if peek \
                     else self.router.decide(sig)
             bname = decision.backend
+            if trace is not None:
+                # the routing decision IS a trace event, losing EWMAs
+                # attached — trace_inspect answers "why eager?" from this
+                trace.event("router.decide", backend=bname,
+                            reason=decision.reason,
+                            ewma_ms=self.router.estimates(sig))
             try:
-                prepared = self._prepared_for(bname, qtext, sig, counted)
+                prepared = self._prepared_for(bname, qtext, sig, counted,
+                                              trace=trace)
             except Exception:
                 if self.auto and bname != "eager":
                     self.router.mark_failed(sig, bname)
+                    if trace is not None:
+                        trace.event("router.exclude", backend=bname,
+                                    why="prepare failed")
                     counted = False    # one request, one hit/miss count
                     continue
                 raise
             if self.auto and bname != "eager" and prepared.fallback:
                 self.router.mark_fallback(sig, bname)
+                if trace is not None:
+                    trace.event("router.exclude", backend=bname,
+                                why="eager fallback")
                 counted = False
                 continue
             return decision, prepared
@@ -419,17 +494,31 @@ class Engine:
     def query(self, qtext: str) -> Result:
         clock = self.config.clock
         t0 = clock()
+        # guard-first fast path: with tracing off this costs one
+        # attribute load and one float compare (gated <=1% overhead by
+        # benchmarks/trace_overhead.py)
+        tr = self.tracer
+        trace = tr.begin(qtext) if tr is not None and tr.active else None
         sig = template_signature(qtext)
-        decision, prepared = self._route(qtext, sig)
+        if trace is not None:
+            trace.annotate(sig=sig)
+        decision, prepared = self._route(qtext, sig, trace=trace)
         binding = prepared.template.binding_for(qtext) \
             if prepared.template.rebindable else None
         t_run = clock()
-        res = prepared.run(binding)
+        if trace is not None:
+            sid = trace.start("execute", backend=decision.backend)
+            res = prepared.run(binding, trace=trace)
+            trace.end(sid, rows=len(res))
+        else:
+            res = prepared.run(binding)
         self.router.observe(sig, decision.backend,
                             (clock() - t_run) * 1e3, reason=decision.reason)
         self.metrics.record_latency((clock() - t0) * 1e3)
         self.metrics.record_route(decision.backend)
         self._record(prepared, binding, res)
+        if trace is not None:
+            self._trace_finish(trace, prepared, binding, decision)
         return res
 
     # -- batched execution -----------------------------------------------------
@@ -447,23 +536,47 @@ class Engine:
 
     def _run_group(self, sig: str, decision: RouteDecision,
                    prepared: PreparedQuery,
-                   bindings: List[Optional[object]]) -> List[Result]:
+                   bindings: List[Optional[object]],
+                   traces: Optional[List[Optional[TraceContext]]] = None
+                   ) -> List[Result]:
         """Execute same-template bindings through ``run_batch``, chunked
         at the largest active static shape and padded up to the bucket
         shape (the pad repeats a real binding; padded results are
         dropped).  Backends whose ``run_batch`` is the sequential loop
         are not padded — padding only buys something when the batch is
-        one static-shape program launch."""
+        one static-shape program launch.
+
+        ``traces`` (parallel to ``bindings``) carries the sampled
+        requests' trace contexts.  A chunk shares ONE device launch, so
+        the fenced ``device.launch`` span lands on the chunk's first
+        traced context (the *lead*); every other traced request of the
+        chunk gets its own ``execute`` span flagged
+        ``shared_launch=True``."""
         out: List[Result] = []
         clock = self.config.clock
         max_shape = self.max_active_batch()
         pad = getattr(prepared, "vectorized_batch", False)
+        if traces is None:
+            traces = [None] * len(bindings)
         for start in range(0, len(bindings), max_shape):
             chunk = bindings[start: start + max_shape]
+            traced = [(j, t) for j, t in
+                      enumerate(traces[start: start + max_shape])
+                      if t is not None]
+            lead = traced[0][1] if traced else None
             shape = self.bucket_shape(len(chunk)) if pad else len(chunk)
             padded = chunk + [chunk[-1]] * (shape - len(chunk))
+            open_sids = [
+                (t, t.start("execute", backend=decision.backend,
+                            batch=len(chunk), shape=shape,
+                            shared_launch=t is not lead))
+                for _, t in traced]
+            if lead is not None and shape != len(chunk):
+                lead.event("batch.pad", shape=shape, live=len(chunk),
+                           padding=shape - len(chunk))
             t0 = clock()
-            res = prepared.run_batch(padded)
+            res = prepared.run_batch(padded, trace=lead) \
+                if lead is not None else prepared.run_batch(padded)
             dt_ms = (clock() - t0) * 1e3
             self.metrics.batches += 1
             self.metrics.batched_requests += len(chunk)
@@ -476,16 +589,35 @@ class Engine:
             self.router.observe(sig, decision.backend, dt_ms / len(chunk),
                                 reason=decision.reason, weight=len(chunk))
             if pad:
+                before = self.tuner.active_shapes() \
+                    if lead is not None else None
                 self.tuner.observe(shape, len(chunk), dt_ms)
-            out.extend(res[: len(chunk)])
+                if lead is not None:
+                    after = self.tuner.active_shapes()
+                    if after != before:
+                        lead.event("tuner.retire", retired=[
+                            s for s in before if s not in after])
+            kept = res[: len(chunk)]
+            for (j, t), (_, sid) in zip(traced, open_sids):
+                t.end(sid, rows=len(kept[j]))
+            out.extend(kept)
         return out
 
-    def query_batch(self, qtexts: List[str]) -> List[Result]:
+    def query_batch(self, qtexts: List[str],
+                    traces: Optional[List[Optional[TraceContext]]] = None
+                    ) -> List[Result]:
         """Execute a list of queries, amortizing device launches: requests
         sharing a prepared template are stacked into one batched program
         execution (see :meth:`PreparedQuery.run_batch`); results come back
         in submission order.  This is the synchronous core the serving
-        layer's micro-batcher drains into."""
+        layer's micro-batcher drains into.  ``traces`` lets the batcher
+        hand over trace contexts begun at submit time (so the queue span
+        is part of the trace); called directly, the engine samples its
+        own."""
+        tr = self.tracer
+        if traces is None:
+            traces = [tr.begin(q) for q in qtexts] \
+                if tr is not None and tr.active else [None] * len(qtexts)
         results: List[Optional[Result]] = [None] * len(qtexts)
         sig_groups: "OrderedDict[str, List[int]]" = OrderedDict()
         for i, qtext in enumerate(qtexts):
@@ -499,10 +631,13 @@ class Engine:
             groups: "OrderedDict[int, Tuple[RouteDecision, PreparedQuery, List[int]]]" = \
                 OrderedDict()
             for i in idxs:
+                if traces[i] is not None:
+                    traces[i].annotate(sig=sig)
                 # per-request _route keeps the failure/fallback re-route
                 # machinery; on the cached fast path it is one dict get
                 decision, prepared = self._route(qtexts[i], sig,
-                                                 use=shared)
+                                                 use=shared,
+                                                 trace=traces[i])
                 groups.setdefault(id(prepared),
                                   (decision, prepared, []))[2].append(i)
             for decision, prepared, sub in groups.values():
@@ -510,11 +645,76 @@ class Engine:
                             if prepared.template.rebindable else None
                             for i in sub]
                 group_results = self._run_group(sig, decision, prepared,
-                                                bindings)
+                                                bindings,
+                                                [traces[i] for i in sub])
                 for i, binding, res in zip(sub, bindings, group_results):
                     results[i] = res
                     self._record(prepared, binding, res)
+                    if traces[i] is not None:
+                        self._trace_finish(traces[i], prepared, binding,
+                                           decision)
         return results  # type: ignore[return-value]
+
+    # -- trace support ---------------------------------------------------------
+    def _trace_finish(self, trace: TraceContext, prepared: PreparedQuery,
+                      binding, decision: RouteDecision) -> None:
+        """Join the cardinality-drift report onto the trace's launch
+        spans and hand the finished trace to the flight recorder."""
+        if getattr(self.config, "trace_cardinality", True):
+            drift = self._cardinality_drift(prepared, binding)
+            if drift is not None:
+                if trace.annotate_named("device.launch",
+                                        cardinalities=drift) == 0:
+                    trace.annotate_named("host.execute",
+                                         cardinalities=drift)
+                trace.annotate(cardinalities=drift)
+        trace.finish(backend=decision.backend)
+
+    def _cardinality_drift(self, prepared: PreparedQuery, binding
+                           ) -> Optional[List[Dict[str, object]]]:
+        """Estimated vs. actual per-step cardinalities of a flat BGP
+        pipeline — ``explain()``'s drift report as a per-trace artifact.
+        The actual column joins the steps on the host, so reports are
+        cached per (prepared, binding): a hot template's traces pay the
+        joins once, not per request."""
+        from repro.core.algebra import BGP
+        from repro.core.modifiers import peel_spine
+        from repro.engine.template import rebind_plan
+
+        plan = getattr(prepared, "plan", None)
+        if plan is None or plan.empty or not plan.steps:
+            return None
+        if binding is not None and binding.missing:
+            return None
+        key = (id(prepared),
+               tuple(sorted(binding.mapping.items()))
+               if binding is not None else ())
+        hit = self._drift_cache.get(key)
+        if hit is not None:
+            self._drift_cache.move_to_end(key)
+            return hit
+        core, _ = peel_spine(prepared.template.query)
+        if not isinstance(core, BGP):
+            return None
+        concrete = plan if binding is None \
+            else rebind_plan(plan, binding.mapping)
+        from repro.core import estimate as _estimate
+        ests = _estimate.estimate_order(concrete.steps, self.ctx.catalog)
+        actuals = _estimate.actual_cardinalities(concrete.steps,
+                                                 self.ctx.catalog)
+        if actuals is None:
+            return None
+        if ests is None:
+            ests = [None] * len(concrete.steps)
+        drift = [{"step": i, "op": step.describe(),
+                  "est": None if est is None else round(est.rows, 1),
+                  "actual": int(act)}
+                 for i, (step, est, act)
+                 in enumerate(zip(concrete.steps, ests, actuals))]
+        self._drift_cache[key] = drift
+        while len(self._drift_cache) > _DRIFT_CACHE_SIZE:
+            self._drift_cache.popitem(last=False)
+        return drift
 
     # -- observability ---------------------------------------------------------
     def runtime_report(self) -> Dict[str, object]:

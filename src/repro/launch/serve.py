@@ -50,6 +50,8 @@ def serve_sparql(args) -> None:
             int(t) for t in args.batch_shapes.replace(",", " ").split())
     if args.planner:
         rt_kwargs["planner"] = args.planner
+    if args.trace_sample is not None:
+        rt_kwargs["trace_sample_rate"] = args.trace_sample
     runtime = RuntimeConfig(**rt_kwargs) if rt_kwargs else None
     # "auto" routes per template across eager/jit (add --backend
     # distributed explicitly to pin the sharded path to a mesh)
@@ -71,6 +73,20 @@ def serve_sparql(args) -> None:
           f"statistics-only empties, routed {m['routed']})")
     if args.runtime_report:
         print(json.dumps(engine.runtime_report(), indent=2))
+    if args.trace_dump:
+        with open(args.trace_dump, "w") as f:
+            if args.trace_dump.endswith(".jsonl"):
+                f.write(engine.tracer.to_jsonl())
+            else:
+                json.dump(engine.tracer.chrome_trace(), f)
+        n = len(engine.tracer.recorder)
+        print(f"wrote {n} trace(s) to {args.trace_dump!r} "
+              f"(inspect: python tools/trace_inspect.py {args.trace_dump}; "
+              "chrome://tracing loads the .json form)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics.prometheus())
+        print(f"wrote Prometheus exposition to {args.metrics_out!r}")
 
 
 def serve_lm(args) -> None:
@@ -115,6 +131,17 @@ def main() -> None:
     ap.add_argument("--runtime-report", action="store_true",
                     help="print the adaptive-runtime JSON snapshot "
                          "(routing decisions, batch-shape menu, knobs)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="per-request span-trace sampling rate in [0,1] "
+                         "(default REPRO_RT_TRACE_SAMPLE or 0.0 = off; "
+                         "see docs/observability.md)")
+    ap.add_argument("--trace-dump", default=None,
+                    help="write the flight recorder after serving: "
+                         "Chrome chrome://tracing JSON, or JSONL when "
+                         "the path ends in .jsonl")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the Prometheus text exposition of the "
+                         "serving metrics to this file after serving")
     ap.add_argument("--store", default=None,
                     help="persistent catalog store directory: boot from it "
                          "when it exists (no build pipeline), else build "

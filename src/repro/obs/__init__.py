@@ -1,0 +1,29 @@
+"""Low-overhead observability: spans, flight recorder, histograms.
+
+The serving layer's evidence plane.  Three pieces, all wired through
+:class:`~repro.runtime.config.RuntimeConfig` knobs (``REPRO_RT_TRACE_*``)
+and all costing ~nothing when off:
+
+* :mod:`repro.obs.tracer` — per-request span traces with deterministic
+  stride sampling (``trace_sample_rate``), carried by argument through
+  ``Engine.query``/``query_batch``, the micro-batcher, prepared queries
+  and both device executors;
+* :mod:`repro.obs.recorder` — the flight recorder: a ring of the last N
+  complete traces plus a slow-query reservoir, exportable as Chrome
+  ``chrome://tracing`` JSON and JSONL (``tools/trace_inspect.py``,
+  ``launch/serve.py --trace-dump``);
+* :mod:`repro.obs.histogram` — O(1)-memory log-bucketed latency
+  histograms backing ``ServerMetrics`` percentiles and the Prometheus
+  text exposition (:mod:`repro.obs.prometheus`,
+  ``ServerMetrics.prometheus()``, ``launch/serve.py --metrics-out``).
+
+See docs/observability.md for the span taxonomy, bucket scheme and
+metric names.
+"""
+
+from repro.obs.histogram import LogHistogram
+from repro.obs.recorder import FlightRecorder
+from repro.obs.tracer import Span, TraceContext, Tracer
+
+__all__ = ["LogHistogram", "FlightRecorder", "Span", "TraceContext",
+           "Tracer"]

@@ -116,6 +116,27 @@ class RuntimeConfig:
         # tests/conftest.py turns it on for the whole suite.
         self.verify_plans = _env_bool("REPRO_RT_VERIFY_PLANS", False)
 
+        ######## Observability ########
+        # fraction of requests that carry a full span trace (repro.obs):
+        # 0.0 disables tracing entirely (the engine's guard-first fast
+        # path — benchmarks/trace_overhead.py gates it at <=1% overhead),
+        # 1.0 traces everything; in between is deterministic stride
+        # sampling (1 in round(1/rate) requests)
+        self.trace_sample_rate = _env_float("REPRO_RT_TRACE_SAMPLE", 0.0)
+        # flight-recorder ring: newest N complete traces kept in memory
+        self.trace_ring = _env_int("REPRO_RT_TRACE_RING", 256)
+        # traces slower than this end-to-end survive ring eviction in the
+        # slow-query reservoir (up to trace_slow_keep, slowest win)
+        self.trace_slow_ms = _env_float("REPRO_RT_TRACE_SLOW_MS", 100.0)
+        self.trace_slow_keep = _env_int("REPRO_RT_TRACE_SLOW_KEEP", 64)
+        # join estimated vs. actual per-step cardinalities onto each
+        # traced request's device-launch spans (the explain() drift
+        # report as a sampled always-on artifact); cached per
+        # (signature, binding), host-computed — disable if even sampled
+        # requests must never run host joins
+        self.trace_cardinality = _env_bool("REPRO_RT_TRACE_CARDINALITY",
+                                           True)
+
         ######## Micro-batching ########
         # static batch-shape menu (Engine pads buckets up to these); the
         # tuner retires entries it measures as regressions
@@ -137,6 +158,10 @@ class RuntimeConfig:
                                                  for s in self.batch_shapes)))
         if not self.batch_shapes or min(self.batch_shapes) < 1:
             raise ValueError("batch_shapes must be positive ints")
+        if not 0.0 <= float(self.trace_sample_rate) <= 1.0:
+            raise ValueError(
+                f"trace_sample_rate must be in [0, 1], got "
+                f"{self.trace_sample_rate!r}")
         if self.planner not in ("greedy", "estimate"):
             raise ValueError(
                 f"planner must be 'greedy' or 'estimate', "

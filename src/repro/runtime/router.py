@@ -208,6 +208,16 @@ class BackendRouter:
             (1.0 - alpha) * prev + alpha * latency_ms
 
     # -- observability ---------------------------------------------------------
+    def estimates(self, sig: str) -> Dict[str, float]:
+        """Per-backend latency EWMAs for one signature — what a routing
+        decision was judged against (the trace stream attaches these to
+        every ``router.decide`` event, so ``tools/trace_inspect.py`` can
+        answer "why eager?" from the trace alone)."""
+        st = self._sigs.get(sig)
+        if st is None:
+            return {}
+        return {b: round(v, 4) for b, v in st.ewma_ms.items()}
+
     def routed_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
         for entry in self.log:

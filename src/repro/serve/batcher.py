@@ -39,6 +39,10 @@ class PendingQuery:
         self._result = _UNSET
         self._error: Optional[BaseException] = None
         self.submitted_at = time.perf_counter()
+        # sampled requests carry their TraceContext from submit onward,
+        # so the queue wait is part of the trace (None when unsampled)
+        self.trace = None
+        self._queue_sid: Optional[int] = None
 
     def done(self) -> bool:
         return self._result is not _UNSET or self._error is not None
@@ -106,6 +110,11 @@ class MicroBatcher:
         flush)."""
         sig = template_signature(qtext)
         ticket = PendingQuery(self, qtext, sig)
+        tr = getattr(self.engine, "tracer", None)
+        if tr is not None and tr.active:
+            ticket.trace = tr.begin(qtext, sig=sig)
+            if ticket.trace is not None:
+                ticket._queue_sid = ticket.trace.start("queue")
         self._queues.setdefault(sig, []).append(ticket)
         # Auto-flushes swallow execution errors: the caller of THIS submit
         # must still receive its ticket; every failed request's ticket
@@ -130,8 +139,18 @@ class MicroBatcher:
         group = self._queues.pop(sig, [])
         if not group:
             return 0
+        for ticket in group:
+            if ticket.trace is not None and ticket._queue_sid is not None:
+                ticket.trace.end(ticket._queue_sid, batch=len(group))
+        # the traces kwarg is only passed when something was actually
+        # sampled — stubbed/custom query_batch implementations without
+        # the parameter keep working on the untraced path
+        kwargs = {}
+        if any(t.trace is not None for t in group):
+            kwargs["traces"] = [t.trace for t in group]
         try:
-            results = self.engine.query_batch([t.qtext for t in group])
+            results = self.engine.query_batch(
+                [t.qtext for t in group], **kwargs)
         except BaseException as exc:
             for ticket in group:
                 ticket._error = exc

@@ -20,6 +20,15 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv",
              "results"}
 EXTERNAL = ("http://", "https://", "mailto:")
+#: docs that must exist (repo-root-relative) — a rename or deletion
+#: must update every inbound link AND this registry, deliberately
+REQUIRED_DOCS = (
+    "README.md",
+    "ROADMAP.md",
+    "docs/architecture.md",
+    "docs/serving.md",
+    "docs/observability.md",
+)
 
 
 def iter_markdown(root: Path):
@@ -52,6 +61,9 @@ def main() -> int:
     root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 \
         else Path(__file__).resolve().parent.parent
     errors = []
+    for rel in REQUIRED_DOCS:
+        if not (root / rel).exists():
+            errors.append(f"{rel}: required doc missing")
     n_files = 0
     for path in iter_markdown(root):
         n_files += 1

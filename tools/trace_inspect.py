@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Inspect flight-recorder dumps (``launch/serve.py --trace-dump``).
+
+Reads either export format — Chrome ``chrome://tracing`` JSON (a
+``{"traceEvents": [...]}`` object) or JSONL (one trace object per line,
+the :meth:`repro.obs.recorder.FlightRecorder.to_jsonl` shape) — and
+answers the operator questions a raw dump can't:
+
+    python tools/trace_inspect.py traces.json            # per-trace table
+    python tools/trace_inspect.py traces.json --stages   # stage totals
+    python tools/trace_inspect.py traces.json --slowest 5
+    python tools/trace_inspect.py traces.json --why 3    # routing story
+    python tools/trace_inspect.py traces.jsonl --drift   # est vs actual
+
+``--why`` prints the trace's ``router.decide`` / ``router.exclude``
+events with the losing EWMAs attached — "why did this request run on
+eager?" straight from the trace stream, no separate runtime report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+
+def _load(path: str) -> List[Dict[str, Any]]:
+    """Normalize either dump format to the JSONL trace-dict shape."""
+    text = open(path).read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        # multiple top-level objects: one trace dict per line (JSONL)
+        return [json.loads(line) for line in text.splitlines()
+                if line.strip()]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return _from_chrome(doc["traceEvents"])
+    return [doc] if isinstance(doc, dict) else list(doc)
+
+
+def _from_chrome(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Group chrome events back into per-trace dicts (tid == trace id;
+    ``ph: "X"`` spans, ``ph: "i"`` instants)."""
+    by_tid: Dict[int, Dict[str, Any]] = {}
+    for ev in events:
+        tid = ev.get("tid", 0)
+        tr = by_tid.setdefault(tid, {"trace_id": tid, "spans": []})
+        if ev.get("ph") == "X":
+            tr["spans"].append({
+                "name": ev["name"],
+                "t0": ev["ts"] / 1e6,
+                "t1": (ev["ts"] + ev.get("dur", 0.0)) / 1e6,
+                "duration_ms": ev.get("dur", 0.0) / 1e3,
+                "attrs": ev.get("args", {}), "events": [],
+            })
+        elif ev.get("ph") == "i" and tr["spans"]:
+            tr["spans"][-1]["events"].append(
+                {"name": ev["name"], "t": ev["ts"] / 1e6,
+                 "attrs": ev.get("args", {})})
+    out = []
+    for tr in by_tid.values():
+        root = next((s for s in tr["spans"] if s["name"] == "request"),
+                    None)
+        tr["duration_ms"] = root["duration_ms"] if root else None
+        out.append(tr)
+    out.sort(key=lambda t: min((s["t0"] for s in t["spans"]),
+                               default=0.0))
+    return out
+
+
+def _root(trace: Dict[str, Any]) -> Dict[str, Any]:
+    for s in trace["spans"]:
+        if s["name"] == "request":
+            return s
+    return trace["spans"][0] if trace["spans"] else {"attrs": {}}
+
+
+def _all_events(trace: Dict[str, Any]):
+    for span in trace["spans"]:
+        for ev in span.get("events", []):
+            yield ev
+
+
+def _fmt_ms(v) -> str:
+    return "?" if v is None else f"{v:9.3f}"
+
+
+def cmd_table(traces: List[Dict[str, Any]]) -> None:
+    print(f"{'trace':>6} {'total_ms':>9} {'backend':>12} "
+          f"{'spans':>5}  query")
+    for tr in traces:
+        root = _root(tr)
+        attrs = root.get("attrs", {})
+        q = attrs.get("qtext", attrs.get("sig", ""))
+        q = " ".join(str(q).split())
+        print(f"{tr.get('trace_id', '?'):>6} "
+              f"{_fmt_ms(tr.get('duration_ms'))} "
+              f"{attrs.get('backend', '?'):>12} "
+              f"{len(tr['spans']):>5}  {q[:70]}")
+
+
+def cmd_stages(traces: List[Dict[str, Any]]) -> None:
+    total: Dict[str, float] = defaultdict(float)
+    count: Dict[str, int] = defaultdict(int)
+    for tr in traces:
+        for s in tr["spans"]:
+            if s.get("duration_ms") is not None:
+                total[s["name"]] += s["duration_ms"]
+                count[s["name"]] += 1
+    print(f"{'stage':>16} {'count':>6} {'total_ms':>10} {'mean_ms':>9}")
+    for name in sorted(total, key=lambda n: -total[n]):
+        print(f"{name:>16} {count[name]:>6} {total[name]:>10.3f} "
+              f"{total[name] / count[name]:>9.3f}")
+
+
+def cmd_slowest(traces: List[Dict[str, Any]], n: int) -> None:
+    ranked = sorted(traces, key=lambda t: -(t.get("duration_ms") or 0.0))
+    cmd_table(ranked[:n])
+
+
+def cmd_why(traces: List[Dict[str, Any]], trace_id: int) -> int:
+    tr = next((t for t in traces if t.get("trace_id") == trace_id), None)
+    if tr is None:
+        print(f"no trace {trace_id} in dump "
+              f"(have: {[t.get('trace_id') for t in traces]})")
+        return 1
+    found = False
+    for ev in _all_events(tr):
+        if ev["name"] not in ("router.decide", "router.exclude"):
+            continue
+        found = True
+        a = ev.get("attrs", {})
+        if ev["name"] == "router.exclude":
+            print(f"excluded {a.get('backend')}: {a.get('why')}")
+            continue
+        ewma = a.get("ewma_ms") or {}
+        chosen = a.get("backend")
+        losers = ", ".join(f"{b}={ewma[b]}ms" for b in sorted(ewma)
+                           if b != chosen)
+        own = f"{ewma[chosen]}ms" if chosen in ewma else "no estimate yet"
+        print(f"ran on {chosen} ({a.get('reason')}): own EWMA {own}"
+              + (f"; losing: {losers}" if losers else ""))
+    if not found:
+        print("no routing events in this trace")
+    return 0
+
+
+def cmd_drift(traces: List[Dict[str, Any]]) -> None:
+    for tr in traces:
+        cards = _root(tr).get("attrs", {}).get("cardinalities")
+        if not cards:
+            continue
+        print(f"trace {tr.get('trace_id')}:")
+        for c in cards:
+            est, act = c.get("est"), c.get("actual")
+            ratio = "?" if not est or act is None \
+                else f"{(act / est):.2f}x"
+            print(f"  step {c.get('step')}: est={est} actual={act} "
+                  f"({ratio})  {c.get('op', '')}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dump", help="trace dump (.json chrome / .jsonl)")
+    ap.add_argument("--stages", action="store_true",
+                    help="aggregate per-stage span totals")
+    ap.add_argument("--slowest", type=int, metavar="N", default=None,
+                    help="show only the N slowest traces")
+    ap.add_argument("--why", type=int, metavar="TRACE_ID", default=None,
+                    help="print the routing decision story of one trace")
+    ap.add_argument("--drift", action="store_true",
+                    help="estimated vs. actual per-step cardinalities")
+    args = ap.parse_args(argv)
+    traces = _load(args.dump)
+    if not traces:
+        print("empty dump")
+        return 1
+    if args.why is not None:
+        return cmd_why(traces, args.why)
+    if args.drift:
+        cmd_drift(traces)
+    elif args.stages:
+        cmd_stages(traces)
+    elif args.slowest is not None:
+        cmd_slowest(traces, args.slowest)
+    else:
+        cmd_table(traces)
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:     # e.g. piped into head
+        sys.exit(0)
